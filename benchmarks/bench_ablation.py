@@ -1,0 +1,40 @@
+"""Fig. 12 — ablation: full ContiguousKV vs w/o Prefetch (P) vs w/o
+Attention-guided Cache (AC) vs w/o both, on 14B/32B (sim, budget 25%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, run_requests, sim_engine
+from repro.core import SyntheticWorkload
+from repro.core.cache import LFUCache
+from repro.configs import get_config
+
+
+def _variant(model, prefix_len, wl, *, prefetch, attention_cache, n_req):
+    kw = dict(budget=0.25, prefetch=prefetch)
+    eng, _, _ = sim_engine("contiguous_kv", model, prefix_len, wl=wl, **kw)
+    if not attention_cache:  # swap the policy for LFU (same capacities)
+        eng.cache = LFUCache(eng.cache.device_capacity, eng.cache.host_capacity)
+    traces = run_requests(eng, n_req)
+    return float(np.mean([t.ttft for t in traces[1:]]))
+
+
+def run(quick: bool = False):
+    rows = []
+    models = ["qwen2.5-14b"] if quick else ["qwen2.5-14b", "qwen2.5-32b"]
+    n_req = 3 if quick else 6
+    prefix_len = 6000
+    for model in models:
+        cfg = get_config(model)
+        wl = SyntheticWorkload(prefix_len, cfg.n_layers, seed=4, request_drift=0.3)
+        full = _variant(model, prefix_len, wl, prefetch=True, attention_cache=True, n_req=n_req)
+        no_p = _variant(model, prefix_len, wl, prefetch=False, attention_cache=True, n_req=n_req)
+        no_ac = _variant(model, prefix_len, wl, prefetch=True, attention_cache=False, n_req=n_req)
+        no_both = _variant(model, prefix_len, wl, prefetch=False, attention_cache=False, n_req=n_req)
+        rows += [
+            (f"fig12/ttft_ms/{model}/full", full * 1e3, "ms"),
+            (f"fig12/ttft_ms/{model}/wo_P", no_p * 1e3, "ms"),
+            (f"fig12/ttft_ms/{model}/wo_AC", no_ac * 1e3, "ms"),
+            (f"fig12/ttft_ms/{model}/wo_P_wo_AC", no_both * 1e3, "ms"),
+        ]
+    return rows

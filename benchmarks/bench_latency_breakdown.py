@@ -1,0 +1,36 @@
+"""Figs. 5 + 13 — Re-Prefill latency breakdown by stage across KV budgets.
+
+IMPRESS's breakdown (Fig. 5): probing + critical-KV I/O dominate (>65%).
+ContiguousKV's (Fig. 13): the critical-chunk stage shrinks (prefetch overlap),
+probing proportion rises because everything else shrank.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, sim_engine
+
+
+def _breakdown(system: str, budget: float):
+    eng, ex, _ = sim_engine(system, "qwen2.5-7b", 6000, budget=budget)
+    _, tr = eng.reprefill([0] * 64)
+    io_probe = tr.stages.get("probe_io", 0.0)
+    io_kv = tr.stages.get("kv_io", 0.0)
+    compute = ex.stage_times.get("compute", 0.0) + ex.stage_times.get("identify", 0.0)
+    total = max(tr.ttft, 1e-12)
+    return io_probe / total, io_kv / total, compute / total, tr.ttft
+
+
+def run(quick: bool = False):
+    rows = []
+    budgets = (0.05, 0.25) if quick else (0.05, 0.10, 0.25, 0.50)
+    for system in ("impress", "contiguous_kv"):
+        fig = "fig5" if system == "impress" else "fig13"
+        for b in budgets:
+            probe, kv, comp, ttft = _breakdown(system, b)
+            tag = f"{fig}/breakdown/{system}/b{int(b*100)}"
+            rows += [
+                (f"{tag}/probe_io_frac", probe, "fraction"),
+                (f"{tag}/critical_kv_io_frac", kv, "fraction"),
+                (f"{tag}/compute_frac", comp, "fraction"),
+                (f"{tag}/ttft_ms", ttft * 1e3, "ms"),
+            ]
+    return rows

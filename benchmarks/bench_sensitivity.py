@@ -1,0 +1,76 @@
+"""Figs. 14/15/16 — sensitivity: SemChunk size, Period size, SubPeriod size,
+prefix-length scalability. TTFT from sim; quality proxy from the real model
+for the chunk-size axis (the accuracy/efficiency trade-off of Fig. 14)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import Row, real_engine, run_requests, sim_engine, tiny_model
+from repro.core import SyntheticWorkload
+from repro.configs import get_config
+from repro.models import transformer as T
+
+
+def run(quick: bool = False):
+    rows = []
+    model = "qwen2.5-7b"
+    cfg_big = get_config(model)
+    prefix_len = 6016  # multiple of every chunk size swept
+    wl = SyntheticWorkload(prefix_len, cfg_big.n_layers, seed=6)
+    n_req = 2 if quick else 4
+
+    # Fig 14: chunk size -> TTFT (sim)
+    for c in (4, 8, 16, 32):
+        eng, _, _ = sim_engine("contiguous_kv", model, prefix_len, wl=wl,
+                               budget=0.25, chunk_tokens=c)
+        traces = run_requests(eng, n_req)
+        rows.append((f"fig14/ttft_ms/chunk{c}",
+                     float(np.mean([t.ttft for t in traces[1:]])) * 1e3, "ms"))
+
+    # Fig 14: chunk size -> quality proxy (real tiny model)
+    if not quick:
+        cfg, params, prefix = tiny_model(n_layers=4, prefix_len=256)
+        rng = np.random.default_rng(9)
+        suffix = rng.integers(0, cfg.vocab_size, 16)
+        ref = np.asarray(T.forward(
+            params, {"tokens": jnp.asarray(np.concatenate([prefix, suffix]))[None]},
+            cfg, block_q=32))[0, -1]
+        for c in (4, 16, 32):
+            eng, _ = real_engine("contiguous_kv", cfg, params, prefix,
+                                 budget=0.25, chunk_tokens=c,
+                                 device_cap=0, host_cap=0)
+            logits, _ = eng.reprefill(suffix)
+            got = np.asarray(logits[0, -1])
+            cos = float(np.dot(ref, got) /
+                        (np.linalg.norm(ref) * np.linalg.norm(got) + 1e-12))
+            rows.append((f"fig14/quality_cos/chunk{c}", cos, "cos"))
+
+    # Fig 15: period size -> TTFT
+    for p in (4, 8, 16):
+        eng, _, _ = sim_engine("contiguous_kv", model, prefix_len, wl=wl,
+                               budget=0.25, period=p, subperiod=min(4, p))
+        traces = run_requests(eng, n_req)
+        rows.append((f"fig15/ttft_ms/period{p}",
+                     float(np.mean([t.ttft for t in traces[1:]])) * 1e3, "ms"))
+
+    # Fig 16b: subperiod size -> TTFT
+    for sp in (1, 2, 4, 8):
+        eng, _, _ = sim_engine("contiguous_kv", model, prefix_len, wl=wl,
+                               budget=0.25, period=8, subperiod=sp)
+        traces = run_requests(eng, n_req)
+        rows.append((f"fig16/ttft_ms/subperiod{sp}",
+                     float(np.mean([t.ttft for t in traces[1:]])) * 1e3, "ms"))
+
+    # Fig 16a: prefix length scaling vs IMPRESS
+    for n in ((2048, 6016) if quick else (2048, 4096, 6016, 10240)):
+        wl_n = SyntheticWorkload(n, cfg_big.n_layers, seed=6)
+        t = {}
+        for system in ("contiguous_kv", "impress"):
+            eng, _, _ = sim_engine(system, model, n, wl=wl_n, budget=0.25)
+            traces = run_requests(eng, n_req)
+            t[system] = float(np.mean([tr.ttft for tr in traces[1:]]))
+            rows.append((f"fig16/ttft_ms/prefix{n}/{system}", t[system] * 1e3, "ms"))
+        rows.append((f"fig16/speedup/prefix{n}", t["impress"] / t["contiguous_kv"], "x"))
+    return rows

@@ -1,0 +1,37 @@
+"""Fig. 7 — similarity of important ContiguousChunk indices across layers
+and across Periods (coverage ratio), measured on a real tiny model."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, real_engine, tiny_model
+from repro.core.importance import coverage_ratio
+
+
+def run(quick: bool = False):
+    cfg, params, prefix = tiny_model(n_layers=8, prefix_len=512)
+    # period=1 -> per-layer selection, to measure raw layer-to-layer coverage
+    eng, _ = real_engine("contiguous_kv", cfg, params, prefix, budget=0.25,
+                         period=1, subperiod=1, device_cap=0, host_cap=0)
+    rng = np.random.default_rng(0)
+    _, tr = eng.reprefill(rng.integers(0, cfg.vocab_size, 16))
+    per_layer = [tr.selected_per_layer[l] for l in range(cfg.n_layers)]
+    adj = [coverage_ratio(per_layer[i], per_layer[i + 1])
+           for i in range(len(per_layer) - 1)]
+    far = [coverage_ratio(per_layer[i], per_layer[min(i + 4, len(per_layer) - 1)])
+           for i in range(len(per_layer) - 4)]
+
+    # period=2 -> period-to-period coverage (Fig. 7b)
+    eng2, _ = real_engine("contiguous_kv", cfg, params, prefix, budget=0.25,
+                          period=2, subperiod=1, device_cap=0, host_cap=0)
+    _, tr2 = eng2.reprefill(rng.integers(0, cfg.vocab_size, 16))
+    sels = tr2.selected_per_period
+    per_period = [coverage_ratio(sels[i], sels[i + 1]) for i in range(len(sels) - 1)]
+
+    return [
+        ("fig7/coverage/adjacent_layers/mean", float(np.mean(adj)), "ratio"),
+        ("fig7/coverage/far_layers/mean", float(np.mean(far)) if far else 0.0, "ratio"),
+        ("fig7/coverage/adjacent_periods/mean", float(np.mean(per_period)), "ratio"),
+        ("fig7/coverage/adjacent_periods/min", float(np.min(per_period)), "ratio"),
+        ("fig7/coverage/adjacent_periods/max", float(np.max(per_period)), "ratio"),
+    ]

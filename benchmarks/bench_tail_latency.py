@@ -1,0 +1,27 @@
+"""Fig. 11 — P95 tail TTFT at 5% budget over a request stream (sim)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, SYSTEMS, run_requests, sim_engine
+from repro.core import SyntheticWorkload
+from repro.configs import get_config
+
+
+def run(quick: bool = False):
+    rows = []
+    model = "qwen2.5-7b"
+    cfg = get_config(model)
+    prefix_len = 6000
+    n_req = 8 if quick else 24
+    wl = SyntheticWorkload(prefix_len, cfg.n_layers, seed=3, request_drift=0.5)
+    for system in SYSTEMS:
+        b = 0.05 if system != "as_lru" else 1.0
+        eng, _, _ = sim_engine(system, model, prefix_len, wl=wl, budget=b)
+        traces = run_requests(eng, n_req, seed=3)
+        ts = np.array([t.ttft for t in traces[1:]])
+        rows += [
+            (f"fig11/p95_ttft_ms/{system}", float(np.percentile(ts, 95)) * 1e3, "ms"),
+            (f"fig11/p50_ttft_ms/{system}", float(np.percentile(ts, 50)) * 1e3, "ms"),
+        ]
+    return rows

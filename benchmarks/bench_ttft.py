@@ -1,0 +1,41 @@
+"""Fig. 10 — average TTFT: 4 systems x 3 model scales x 2 budgets (sim).
+
+The headline table: ContiguousKV's speedup vs IMPRESS / AS+H2O / AS+LRU at
+5% and 25% KV budgets on Qwen2.5-7B/14B/32B with warmed caches.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, SYSTEMS, run_requests, sim_engine
+from repro.core import SyntheticWorkload
+from repro.configs import get_config
+
+
+def _avg_ttft(system, model, prefix_len, budget, wl, n_req):
+    eng, _, _ = sim_engine(system, model, prefix_len, wl=wl, budget=budget)
+    traces = run_requests(eng, n_req)
+    warm = traces[1:] if len(traces) > 1 else traces  # skip cold-start
+    return float(np.mean([t.ttft for t in warm]))
+
+
+def run(quick: bool = False):
+    rows = []
+    models = ["qwen2.5-7b"] if quick else ["qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b"]
+    prefix_len = 6000
+    n_req = 3 if quick else 6
+    for model in models:
+        cfg = get_config(model)
+        wl = SyntheticWorkload(prefix_len, cfg.n_layers, seed=2)
+        for budget in (0.05, 0.25):
+            ttfts = {}
+            for system in SYSTEMS:
+                b = budget if system != "as_lru" else 1.0
+                ttfts[system] = _avg_ttft(system, model, prefix_len, b, wl, n_req)
+                rows.append((f"fig10/ttft_ms/{model}/b{int(budget*100)}/{system}",
+                             ttfts[system] * 1e3, "ms"))
+            for base in ("impress", "as_h2o_lfu", "as_lru"):
+                rows.append((
+                    f"fig10/speedup/{model}/b{int(budget*100)}/vs_{base}",
+                    ttfts[base] / ttfts["contiguous_kv"], "x"))
+    return rows

@@ -1,0 +1,130 @@
+"""Shared benchmark substrate: cached tiny real model + sim factories.
+
+Every benchmark module exposes run(quick: bool) -> list[(name, value, derived)].
+Real-mode rows measure actual file/memmap reads + wall time on a tiny model;
+sim-mode rows run paper-scale configs on the calibrated discrete-event model
+(DESIGN.md §5 explains the two-mode methodology).
+"""
+from __future__ import annotations
+
+import functools
+import sys
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, reduced_config  # noqa: E402
+from repro.core import (  # noqa: E402
+    ASH2OEngine,
+    ASLRUEngine,
+    ContiguousKVEngine,
+    IMPRESSEngine,
+    SyntheticWorkload,
+    build_real_session,
+    build_sim_session,
+)
+from repro.core.backends import RealCompute, SimCompute  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.storage.timing import DeviceModel, RealExecutor, SimExecutor  # noqa: E402
+
+Row = Tuple[str, float, str]
+
+SYSTEMS = ("contiguous_kv", "impress", "as_h2o_lfu", "as_lru")
+
+# The paper's testbed (§5.1): A800 (312 TFLOP/s bf16, ~2 TB/s HBM2e),
+# Samsung 990 Pro (7.45 GB/s), PCIe 4.0 x16. Paper-replication benches use
+# these; the dry-run/roofline pipeline uses TPU v5e constants instead.
+PAPER_DEVICE = DeviceModel(compute_flops=312e12, hbm_bandwidth=2.039e12)
+
+# Cache capacities mirror the paper's memory budgets: device+host hold only a
+# fraction of the offloaded prefix KV (10 GB GPU / 24 GB CPU vs 67-343 GB of
+# prefix data). We keep the same BYTE fractions across granularities so
+# chunk- and block-based systems compete fairly.
+DEVICE_CACHE_FRAC = 0.08
+HOST_CACHE_FRAC = 0.20
+
+
+def _caps_from_layout(layout):
+    dev = max(1, int(DEVICE_CACHE_FRAC * layout.total_bytes / layout.unit_bytes))
+    host = max(1, int(HOST_CACHE_FRAC * layout.total_bytes / layout.unit_bytes))
+    return dev, host
+
+
+@functools.lru_cache(maxsize=4)
+def tiny_model(n_layers: int = 4, prefix_len: int = 256, seed: int = 0):
+    cfg = reduced_config("qwen2.5-14b", n_layers=n_layers)
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len)
+    return cfg, params, prefix
+
+
+def real_engine(system: str, cfg, params, prefix, *, budget=0.25,
+                chunk_tokens=16, block_tokens=64, period=2, subperiod=1,
+                device_cap=None, host_cap=None, **kw):
+    coarse = system != "contiguous_kv"
+    sess = build_real_session(cfg, params, prefix, chunk_tokens=chunk_tokens,
+                              coarse_blocks=coarse, block_tokens=block_tokens,
+                              in_memory=True)
+    dcap, hcap = _caps_from_layout(sess.store.layout)
+    device_cap = dcap if device_cap is None else device_cap
+    host_cap = hcap if host_cap is None else host_cap
+    be = RealCompute(cfg, params)
+    ex = RealExecutor()
+    if system == "contiguous_kv":
+        return ContiguousKVEngine(sess, be, ex, budget=budget, period=period,
+                                  subperiod=subperiod, device_cap=device_cap,
+                                  host_cap=host_cap, **kw), sess
+    cls = {"impress": IMPRESSEngine, "as_h2o_lfu": ASH2OEngine,
+           "as_lru": ASLRUEngine}[system]
+    kwargs = dict(device_cap=device_cap, host_cap=host_cap)
+    if system != "as_lru":
+        kwargs["budget"] = budget
+    return cls(sess, be, ex, **kwargs), sess
+
+
+def sim_engine(system: str, model_name: str, prefix_len: int, wl=None, *,
+               budget=0.25, chunk_tokens=16, period=8, subperiod=4,
+               device_cap=None, host_cap=None, device_model=None, **kw):
+    cfg = get_config(model_name)
+    wl = wl or SyntheticWorkload(prefix_len, cfg.n_layers, seed=0)
+    coarse = system != "contiguous_kv"
+    sess = build_sim_session(cfg, prefix_len, chunk_tokens=chunk_tokens,
+                             coarse_blocks=coarse)
+    dcap, hcap = _caps_from_layout(sess.store.layout)
+    device_cap = dcap if device_cap is None else device_cap
+    host_cap = hcap if host_cap is None else host_cap
+    ex = SimExecutor(device_model or PAPER_DEVICE)
+    be = SimCompute(cfg, wl)
+    if system == "contiguous_kv":
+        eng = ContiguousKVEngine(sess, be, ex, budget=budget, period=period,
+                                 subperiod=subperiod, device_cap=device_cap,
+                                 host_cap=host_cap, **kw)
+    else:
+        cls = {"impress": IMPRESSEngine, "as_h2o_lfu": ASH2OEngine,
+               "as_lru": ASLRUEngine}[system]
+        kwargs = dict(device_cap=device_cap, host_cap=host_cap)
+        if system != "as_lru":
+            kwargs["budget"] = budget
+        eng = cls(sess, be, ex, **kwargs)
+    return eng, ex, wl
+
+
+def run_requests(eng, n_requests: int, suffix_len: int = 64, seed: int = 0):
+    """Drive a request stream; returns list of traces."""
+    rng = np.random.default_rng(seed)
+    traces = []
+    for rid in range(n_requests):
+        suffix = rng.integers(0, 1000, suffix_len)
+        _, tr = eng.reprefill(suffix, request_id=rid)
+        traces.append(tr)
+    return traces
+
+
+def emit(rows: List[Row]):
+    for name, val, derived in rows:
+        print(f"{name},{val:.6g},{derived}")

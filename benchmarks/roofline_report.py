@@ -1,0 +1,75 @@
+"""Aggregate experiments/dryrun2/*.json into the EXPERIMENTS.md roofline
+table (single-pod baselines, per the assignment spec) + a multi-pod summary.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun2]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "musicgen-large", "hymba-1.5b", "qwen3-1.7b", "qwen2.5-14b", "gemma3-4b",
+    "yi-34b", "falcon-mamba-7b", "internvl2-76b", "granite-moe-3b-a800m",
+    "mixtral-8x22b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_):
+    rows = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        d = json.load(open(f))
+        if not d.get("ok"):
+            continue
+        rows[(d["arch"], d["shape"], d["mesh"])] = d
+    return rows
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun2")
+    p.add_argument("--mesh", default="single")
+    args = p.parse_args()
+    rows = load(args.dir)
+
+    print("| arch | shape | t_compute | t_memory | t_collective | dominant | "
+          "MODEL/HLO flops | mem/chip | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape, args.mesh))
+            if d is None:
+                continue
+            fits = "ok" if d["bytes_per_device"] <= 16e9 else "OVER-HBM"
+            print(f"| {arch} | {shape} | {fmt_s(d['t_compute'])} | "
+                  f"{fmt_s(d['t_memory'])} | {fmt_s(d['t_collective'])} | "
+                  f"{d['dominant']} | {d['useful_ratio']:.2f} | "
+                  f"{d['bytes_per_device']/1e9:.2f}GB {fits} | "
+                  f"compile {d['compile_s']:.0f}s |")
+
+    # multi-pod delta summary: cross-pod collective share
+    print("\nMulti-pod (2x16x16) cross-pod traffic:")
+    print("| arch | shape | total coll B/chip | cross-pod B/chip | share |")
+    print("|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape, "multi"))
+            if d is None:
+                continue
+            total = sum(d["coll_bytes"].values())
+            xpod = d["coll_by_group"].get("2", 0.0) + d["coll_by_group"].get(2, 0.0)
+            share = xpod / total if total else 0.0
+            print(f"| {arch} | {shape} | {total:.3e} | {xpod:.3e} | {share:.1%} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark driver — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10]``
+prints ``name,value,derived`` CSV rows and writes benchmarks/out/results.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks import (  # noqa: E402
+    bench_read_amplification,
+    bench_latency_breakdown,
+    bench_similarity,
+    bench_quality,
+    bench_ttft,
+    bench_tail_latency,
+    bench_ablation,
+    bench_io_reduction,
+    bench_sensitivity,
+)
+
+MODULES = {
+    "fig4": bench_read_amplification,
+    "fig5_13": bench_latency_breakdown,
+    "fig7": bench_similarity,
+    "fig9": bench_quality,
+    "fig10": bench_ttft,
+    "fig11": bench_tail_latency,
+    "fig12": bench_ablation,
+    "table2": bench_io_reduction,
+    "fig14_16": bench_sensitivity,
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--only", default=None, choices=list(MODULES))
+    args = p.parse_args()
+
+    keys = [args.only] if args.only else list(MODULES)
+    all_rows = []
+    print("name,value,derived")
+    for key in keys:
+        t0 = time.time()
+        rows = MODULES[key].run(quick=args.quick)
+        for name, val, derived in rows:
+            print(f"{name},{val:.6g},{derived}", flush=True)
+        all_rows += rows
+        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+
+    os.makedirs("benchmarks/out", exist_ok=True)
+    with open("benchmarks/out/results.csv", "w") as f:
+        f.write("name,value,derived\n")
+        for name, val, derived in all_rows:
+            f.write(f"{name},{val:.6g},{derived}\n")
+    print(f"# wrote benchmarks/out/results.csv ({len(all_rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: ContiguousKV Re-Prefill in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a tiny Qwen-family model, ingests a shared prefix into the chunked
+store, serves one request through the granularity-aligned engine, and shows
+the I/O telemetry (read amplification == 1.0 by construction).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core import ContiguousKVEngine, build_real_session
+from repro.core.backends import RealCompute
+from repro.models import transformer as T
+from repro.storage.timing import RealExecutor
+
+
+def main():
+    cfg = reduced_config("qwen2.5-14b", n_layers=4)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, 256)  # the shared context
+    suffix = rng.integers(0, cfg.vocab_size, 16)  # the new user query
+
+    # offline: compute the prefix KV once, chunk it (c=16), persist to store
+    session = build_real_session(cfg, params, prefix, chunk_tokens=16,
+                                 in_memory=True)
+
+    engine = ContiguousKVEngine(
+        session,
+        RealCompute(cfg, params),
+        RealExecutor(),
+        budget=0.25,  # load only the top-25% most important chunks
+        period=2, subperiod=1,
+        device_cap=64, host_cap=128,
+    )
+
+    logits, trace = engine.reprefill(suffix)
+    print(f"first token: {int(np.argmax(logits[0, -1]))}")
+    print(f"TTFT: {trace.ttft*1e3:.1f} ms (tiny model, CPU)")
+    print(f"SSD bytes: {trace.ssd_bytes:,} in {trace.ssd_requests} coalesced requests")
+    print(f"read amplification: {trace.read_amplification:.2f}x  (aligned => 1.0)")
+    print(f"chunks selected per period: "
+          f"{[len(s) for s in trace.selected_per_period]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""End-to-end training driver: pretrain a small LM on the synthetic few-shot
+corpus for a few hundred steps, with checkpointing + straggler monitoring.
+
+Default preset is CPU-sized; `--preset 100m --steps 300` is the full ~100M
+run described in the deliverables (hours on CPU, minutes on one TPU host).
+
+    PYTHONPATH=src python examples/train_100m.py --steps 30
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+if __name__ == "__main__":
+    # the launcher is the real entrypoint; this example pins a tiny preset
+    import repro.launch.train as train
+
+    if "--preset" not in sys.argv:
+        sys.argv += ["--preset", "tiny"]
+    if "--steps" not in sys.argv:
+        sys.argv += ["--steps", "30"]
+    if "--ckpt-dir" not in sys.argv:
+        sys.argv += ["--ckpt-dir", "/tmp/ckpt_100m"]
+    train.main()

@@ -1,0 +1,40 @@
+"""ContiguousKV core: the paper's contribution as composable JAX modules."""
+from repro.core.cache import (
+    AttentionGuidedCache,
+    ImpressScoreCache,
+    LFUCache,
+    LRUCache,
+)
+from repro.core.chunking import ChunkMeta
+from repro.core.engine import (
+    ASH2OEngine,
+    ASLRUEngine,
+    ContiguousKVEngine,
+    IMPRESSEngine,
+    PrefixSession,
+    ReprefillTrace,
+)
+from repro.core.periods import PeriodSchedule
+from repro.core.session import (
+    SyntheticWorkload,
+    build_real_session,
+    build_sim_session,
+)
+
+__all__ = [
+    "AttentionGuidedCache",
+    "ImpressScoreCache",
+    "LFUCache",
+    "LRUCache",
+    "ChunkMeta",
+    "ASH2OEngine",
+    "ASLRUEngine",
+    "ContiguousKVEngine",
+    "IMPRESSEngine",
+    "PrefixSession",
+    "ReprefillTrace",
+    "PeriodSchedule",
+    "SyntheticWorkload",
+    "build_real_session",
+    "build_sim_session",
+]

@@ -1,0 +1,130 @@
+"""Compute backends for the Re-Prefill engine.
+
+RealCompute — actually runs the (tiny) model layer-by-layer with jitted fns.
+SimCompute  — returns placeholders; selection comes from a workload model;
+              durations are supplied by the engine's cost model through the
+              SimExecutor. Both expose the same five methods so the engine
+              orchestration is byte-identical across modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse_attention as SA
+from repro.models.common import ModelConfig
+from repro.models.layers import rms_norm, swiglu
+from repro.models.attention import qkv_project
+from repro.models.transformer import _ffn, _logits
+
+
+def _slice_layer(params, l: int):
+    return jax.tree_util.tree_map(lambda x: x[l], params["layers"])
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _embed(params, tokens, cfg: ModelConfig):
+    return params["embed"][tokens]
+
+
+@partial(jax.jit, static_argnames=("cfg", "pos0"))
+def _part_a(lp, h, cfg: ModelConfig, pos0: int):
+    """Pre-attention: norm + QKV for the suffix (positions offset by prefix)."""
+    x = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    b, s, _ = x.shape
+    positions = pos0 + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = qkv_project(x, lp, cfg, positions)
+    return x, q, k, v
+
+
+@partial(jax.jit, static_argnames=("cfg", "chunk_tokens"))
+def _part_b(lp, h, q, k_suf, v_suf, k_sel, v_sel, sel_valid, cfg: ModelConfig,
+            chunk_tokens: int):
+    """Attention over [selected chunks ; suffix] + out-proj + FFN."""
+    out, mass = SA.reprefill_attention(
+        q[0], k_sel, v_sel, sel_valid, k_suf[0], v_suf[0], chunk_tokens=chunk_tokens
+    )
+    attn = out[None]
+    o = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"])
+    h = h + o
+    h = _ffn(h, lp, cfg, dropless=True)
+    return h, mass
+
+
+@jax.jit
+def _final_logits_kernel(params, h, norm_eps: float):
+    h = rms_norm(h[:, -1:], params["final_norm"], norm_eps)
+    w = params["unembed"]
+    return jnp.einsum("...d,dv->...v", h, w).astype(jnp.float32)
+
+
+class RealCompute:
+    """Tiny-model execution; batch = 1 request."""
+
+    def __init__(self, cfg: ModelConfig, params):
+        assert cfg.has_attention, "Re-Prefill engine needs attention KV"
+        self.cfg = cfg
+        self.params = params
+
+    def embed(self, suffix_tokens: np.ndarray):
+        return _embed(self.params, jnp.asarray(suffix_tokens)[None], self.cfg)
+
+    def part_a(self, layer: int, h, prefix_len: int):
+        lp = _slice_layer(self.params, layer)
+        return _part_a(lp, h, self.cfg, int(prefix_len))
+
+    def token_scores(self, q, k_probe: np.ndarray, layer: int) -> np.ndarray:
+        """q: (1, s, nq, d) device; k_probe: (n, n_kv, d_probe) numpy."""
+        d = self.cfg.d_head
+        kp = jnp.asarray(k_probe)
+        qq = q[0]
+        if kp.shape[-1] != d:  # partial keys (IMPRESS): truncate q dims to match
+            qq = qq[..., : kp.shape[-1]]
+        return np.asarray(SA.probe_token_scores(qq, kp))
+
+    def part_b(self, layer: int, h, q, k_suf, v_suf,
+               k_sel: np.ndarray, v_sel: np.ndarray, sel_valid: np.ndarray,
+               chunk_tokens: int):
+        lp = _slice_layer(self.params, layer)
+        h, mass = _part_b(
+            lp, h, q, k_suf, v_suf,
+            jnp.asarray(k_sel), jnp.asarray(v_sel), jnp.asarray(sel_valid),
+            self.cfg, chunk_tokens,
+        )
+        return h, np.asarray(mass)
+
+    def logits(self, h) -> np.ndarray:
+        return np.asarray(_final_logits_kernel(self.params, h, self.cfg.norm_eps))
+
+
+class SimCompute:
+    """Paper-scale simulation: no arrays, selection from a workload model."""
+
+    def __init__(self, cfg: ModelConfig, workload):
+        self.cfg = cfg
+        self.workload = workload  # provides token_scores(request, layer) -> np
+        self._request_id = 0
+
+    def new_request(self, request_id: int):
+        self._request_id = request_id
+
+    def embed(self, suffix_tokens):
+        return None
+
+    def part_a(self, layer, h, prefix_len):
+        return None, None, None, None
+
+    def token_scores(self, q, k_probe, layer: int) -> np.ndarray:
+        return self.workload.token_scores(self._request_id, layer)
+
+    def part_b(self, layer, h, q, k_suf, v_suf, k_sel, v_sel, sel_valid, chunk_tokens):
+        mass = self.workload.chunk_mass(self._request_id, layer, sel_valid)
+        return None, mass
+
+    def logits(self, h):
+        return None

@@ -1,0 +1,220 @@
+"""Attention-guided two-tier cache (§4.4) + baseline policies.
+
+Score S_j = I_j x F_j: cumulative attention-based importance times access
+frequency. Two min-heaps (device tier, host tier) evict the lowest-scored
+ContiguousChunk; device evictions demote to host when their score beats the
+host minimum, else drop. Scores persist in an in-memory table even after
+eviction (the paper stores them "including those evicted from memory").
+
+Keys are (layer, unit) pairs. Capacities are in units (chunks/blocks).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import OrderedDict
+from typing import Dict, Hashable, Iterable, Optional, Set, Tuple
+
+Key = Tuple[int, int]
+
+DEVICE = "device"
+HOST = "host"
+
+
+class CachePolicy:
+    """Interface shared by all policies."""
+
+    def __init__(self, device_capacity: int, host_capacity: int):
+        self.device_capacity = device_capacity
+        self.host_capacity = host_capacity
+        self.tiers: Dict[str, Set[Key]] = {DEVICE: set(), HOST: set()}
+        self.hits = {DEVICE: 0, HOST: 0}
+        self.misses = 0
+
+    def lookup(self, key: Key) -> Optional[str]:
+        if key in self.tiers[DEVICE]:
+            self.hits[DEVICE] += 1
+            self.on_access(key)
+            return DEVICE
+        if key in self.tiers[HOST]:
+            self.hits[HOST] += 1
+            self.on_access(key)
+            return HOST
+        self.misses += 1
+        return None
+
+    def contains(self, key: Key) -> Optional[str]:
+        if key in self.tiers[DEVICE]:
+            return DEVICE
+        if key in self.tiers[HOST]:
+            return HOST
+        return None
+
+    # subclass hooks -----------------------------------------------------------
+    def on_access(self, key: Key):
+        pass
+
+    def priority(self, key: Key) -> float:
+        raise NotImplementedError
+
+    # insertion with eviction cascade ------------------------------------------
+    def insert(self, key: Key, tier: str = DEVICE):
+        if self.contains(key) == tier:
+            return
+        if self.contains(key):  # promote/demote: remove from other tier first
+            other = self.contains(key)
+            self.tiers[other].discard(key)
+        self.tiers[tier].add(key)
+        self.on_access(key)
+        self._enforce(tier)
+
+    def _enforce(self, tier: str):
+        cap = self.device_capacity if tier == DEVICE else self.host_capacity
+        while len(self.tiers[tier]) > cap:
+            victim = self._evict_lowest(tier)
+            if victim is None:
+                break
+            if tier == DEVICE:
+                # demote if it beats the host minimum (or host has room)
+                if self.host_capacity > 0 and (
+                    len(self.tiers[HOST]) < self.host_capacity
+                    or self.priority(victim) > self._min_priority(HOST)
+                ):
+                    self.tiers[HOST].add(victim)
+                    self._enforce(HOST)
+
+    def _evict_lowest(self, tier: str) -> Optional[Key]:
+        members = self.tiers[tier]
+        if not members:
+            return None
+        victim = min(members, key=self.priority)
+        members.discard(victim)
+        return victim
+
+    def _min_priority(self, tier: str) -> float:
+        members = self.tiers[tier]
+        return min((self.priority(k) for k in members), default=float("-inf"))
+
+
+class AttentionGuidedCache(CachePolicy):
+    """The paper's policy: S = I x F with persistent score table.
+
+    Uses lazy min-heaps per tier for O(log n) eviction instead of the O(n)
+    scan in the generic base class.
+    """
+
+    def __init__(self, device_capacity: int, host_capacity: int):
+        super().__init__(device_capacity, host_capacity)
+        self.I: Dict[Key, float] = {}
+        self.F: Dict[Key, int] = {}
+        self._heaps = {DEVICE: [], HOST: []}
+        self._counter = itertools.count()
+
+    def priority(self, key: Key) -> float:
+        return self.I.get(key, 0.0) * self.F.get(key, 0)
+
+    def on_access(self, key: Key):
+        self.F[key] = self.F.get(key, 0) + 1
+
+    def update_importance(self, key: Key, attention_score: float):
+        """I_j += A_j after a request used chunk j (Eq. 2 inputs)."""
+        self.I[key] = self.I.get(key, 0.0) + float(attention_score)
+
+    def insert(self, key: Key, tier: str = DEVICE):
+        other = self.contains(key)
+        if other == tier:
+            self.on_access(key)
+            return
+        if other:
+            self.tiers[other].discard(key)
+        self.tiers[tier].add(key)
+        self.on_access(key)
+        heapq.heappush(self._heaps[tier], (self.priority(key), next(self._counter), key))
+        self._enforce(tier)
+
+    def _evict_lowest(self, tier: str) -> Optional[Key]:
+        heap = self._heaps[tier]
+        members = self.tiers[tier]
+        while heap:
+            prio, _, key = heapq.heappop(heap)
+            if key not in members:
+                continue  # stale
+            cur = self.priority(key)
+            if cur > prio:  # score rose since push: reinsert lazily
+                heapq.heappush(heap, (cur, next(self._counter), key))
+                continue
+            members.discard(key)
+            return key
+        return None
+
+    def _enforce(self, tier: str):
+        cap = self.device_capacity if tier == DEVICE else self.host_capacity
+        while len(self.tiers[tier]) > cap:
+            victim = self._evict_lowest(tier)
+            if victim is None:
+                break
+            if tier == DEVICE and self.host_capacity > 0:
+                if (
+                    len(self.tiers[HOST]) < self.host_capacity
+                    or self.priority(victim) > self._min_priority(HOST)
+                ):
+                    self.tiers[HOST].add(victim)
+                    heapq.heappush(
+                        self._heaps[HOST],
+                        (self.priority(victim), next(self._counter), victim),
+                    )
+                    self._enforce(HOST)
+
+    def _min_priority(self, tier: str) -> float:
+        heap = self._heaps[tier]
+        members = self.tiers[tier]
+        while heap and heap[0][2] not in members:
+            heapq.heappop(heap)
+        return heap[0][0] if heap else float("-inf")
+
+
+class LRUCache(CachePolicy):
+    """AttentionStore baseline."""
+
+    def __init__(self, device_capacity: int, host_capacity: int):
+        super().__init__(device_capacity, host_capacity)
+        self._clock = itertools.count()
+        self._last: Dict[Key, int] = {}
+
+    def on_access(self, key: Key):
+        self._last[key] = next(self._clock)
+
+    def priority(self, key: Key) -> float:
+        return self._last.get(key, -1)
+
+
+class LFUCache(CachePolicy):
+    """AS+H2O+LFU baseline."""
+
+    def __init__(self, device_capacity: int, host_capacity: int):
+        super().__init__(device_capacity, host_capacity)
+        self._freq: Dict[Key, int] = {}
+
+    def on_access(self, key: Key):
+        self._freq[key] = self._freq.get(key, 0) + 1
+
+    def priority(self, key: Key) -> float:
+        return self._freq.get(key, 0)
+
+
+class ImpressScoreCache(CachePolicy):
+    """IMPRESS's score-based policy: static importance ratio x frequency."""
+
+    def __init__(self, device_capacity: int, host_capacity: int):
+        super().__init__(device_capacity, host_capacity)
+        self._score: Dict[Key, float] = {}
+        self._freq: Dict[Key, int] = {}
+
+    def set_static_score(self, key: Key, score: float):
+        self._score[key] = max(self._score.get(key, 0.0), float(score))
+
+    def on_access(self, key: Key):
+        self._freq[key] = self._freq.get(key, 0) + 1
+
+    def priority(self, key: Key) -> float:
+        return self._score.get(key, 0.0) * (1 + self._freq.get(key, 0))

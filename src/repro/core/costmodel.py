@@ -1,0 +1,61 @@
+"""Per-layer FLOP/byte cost model for the Re-Prefill simulator.
+
+Used only in simulated mode (paper-scale configs on the CPU container); real
+mode measures wall time. Costs are per single request (batch=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class LayerCost:
+    flops: float
+    hbm_bytes: float
+
+
+def layer_weight_bytes(cfg: ModelConfig, bytes_per_el: int = 2) -> int:
+    per_layer = cfg.d_model * cfg.attn_dim + 2 * cfg.d_model * cfg.kv_dim
+    per_layer += cfg.attn_dim * cfg.d_model
+    if cfg.family == "moe":
+        # only active experts' weights stream from HBM per token batch
+        per_layer += cfg.top_k * 3 * cfg.d_model * cfg.moe_d_ff
+    else:
+        per_layer += 3 * cfg.d_model * cfg.d_ff
+    return per_layer * bytes_per_el
+
+
+def suffix_layer_cost(cfg: ModelConfig, suffix_len: int, attended_tokens: int) -> LayerCost:
+    """One transformer layer over the suffix, attending to `attended_tokens`
+    (selected prefix tokens + suffix)."""
+    s = suffix_len
+    proj = 2 * s * cfg.d_model * (cfg.attn_dim + 2 * cfg.kv_dim + cfg.attn_dim)
+    attn = 2 * 2 * s * attended_tokens * cfg.n_heads * cfg.d_head  # qk + pv
+    if cfg.family == "moe":
+        ffn = 2 * 3 * s * cfg.top_k * cfg.d_model * cfg.moe_d_ff
+    else:
+        ffn = 2 * 3 * s * cfg.d_model * cfg.d_ff
+    kv_bytes = 2 * attended_tokens * cfg.kv_dim * 2
+    return LayerCost(
+        flops=float(proj + attn + ffn),
+        hbm_bytes=float(layer_weight_bytes(cfg) + kv_bytes),
+    )
+
+
+def identification_cost(cfg: ModelConfig, suffix_len: int, prefix_len: int) -> LayerCost:
+    """Score q_suffix against all prefix (probe) keys: s x n x H x d matmul."""
+    flops = 2 * suffix_len * prefix_len * cfg.n_heads * cfg.d_head
+    bytes_ = prefix_len * cfg.kv_dim * 2
+    return LayerCost(flops=float(flops), hbm_bytes=float(bytes_))
+
+
+def probe_bytes(cfg: ModelConfig, prefix_len: int, key_ratio: float = 1.0) -> int:
+    """Bytes of per-layer probing keys (K only)."""
+    return int(prefix_len * cfg.kv_dim * 2 * key_ratio)
+
+
+def token_kv_bytes(cfg: ModelConfig) -> int:
+    """K+V bytes per token per layer (bf16)."""
+    return 2 * cfg.kv_dim * 2

@@ -1,0 +1,86 @@
+"""Chunk-gathered Re-Prefill attention (jittable; batch=1 engine path).
+
+The suffix attends to (a) the gathered selected prefix ContiguousChunks —
+fully visible, no causal mask among prefix — and (b) itself, causally.
+Returns the attention output plus the per-chunk attention mass A_j needed by
+the attention-guided cache (Eq. 1). Selected-chunk counts are padded to a
+bucket size so the jit cache stays small; padding is masked.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def bucket_size(n: int, minimum: int = 8) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+@partial(jax.jit, static_argnames=("chunk_tokens",))
+def reprefill_attention(
+    q: jax.Array,  # (s, n_q, d) suffix queries (rope'd at prefix offset)
+    k_sel: jax.Array,  # (n_bucket, c, n_kv, d) gathered chunks (padded)
+    v_sel: jax.Array,  # (n_bucket, c, n_kv, d)
+    sel_valid: jax.Array,  # (n_bucket,) bool
+    k_suf: jax.Array,  # (s, n_kv, d)
+    v_suf: jax.Array,  # (s, n_kv, d)
+    *,
+    chunk_tokens: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (attn_out (s, n_q, d), chunk_mass (n_bucket,) fp32)."""
+    s, n_q, d = q.shape
+    nb, c, n_kv, _ = k_sel.shape
+    group = n_q // n_kv
+    scale = d ** -0.5
+
+    kp = k_sel.reshape(nb * c, n_kv, d)
+    vp = v_sel.reshape(nb * c, n_kv, d)
+    k_all = jnp.concatenate([kp, k_suf], axis=0)  # (T, n_kv, d)
+    v_all = jnp.concatenate([vp, v_suf], axis=0)
+    T = nb * c + s
+
+    qg = q.reshape(s, n_kv, group, d).astype(jnp.float32)
+    logits = jnp.einsum("sngd,tnd->ngst", qg, k_all.astype(jnp.float32)) * scale
+
+    # mask: prefix positions valid iff their chunk is valid; suffix causal
+    prefix_ok = jnp.repeat(sel_valid, c)  # (nb*c,)
+    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(prefix_ok[None, :], (s, nb * c)), causal], axis=1
+    )  # (s, T)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)  # (n_kv, group, s, T)
+
+    out = jnp.einsum("ngst,tnd->sngd", probs.astype(v_all.dtype), v_all)
+    out = out.reshape(s, n_q, d)
+
+    # A_j: total attention mass landing on each selected chunk
+    mass_tok = probs[..., : nb * c].sum(axis=(0, 1, 2))  # (nb*c,)
+    chunk_mass = mass_tok.reshape(nb, c).sum(axis=-1)
+    return out, chunk_mass
+
+
+@jax.jit
+def probe_token_scores(q: jax.Array, k_probe: jax.Array) -> jax.Array:
+    """Token attention mass a_i over the prefix (fp32, shape (n,)).
+
+    q: (s, n_q, d) suffix queries; k_probe: (n, n_kv, d) prefix keys.
+    Softmax is over prefix tokens only (identification happens before the
+    suffix KV for this layer exists — faithful to Fig. 8's ordering).
+    """
+    s, n_q, d = q.shape
+    n, n_kv, _ = k_probe.shape
+    group = n_q // n_kv
+    scale = d ** -0.5
+    qg = q.reshape(s, n_kv, group, d).astype(jnp.float32)
+    logits = jnp.einsum("sngd,tnd->ngst", qg, k_probe.astype(jnp.float32)) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    return probs.sum(axis=(0, 1, 2))  # (n,)

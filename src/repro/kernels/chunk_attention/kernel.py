@@ -1,0 +1,126 @@
+"""Pallas TPU gathered-ContiguousChunk attention (the paper's hot kernel).
+
+TPU adaptation of ContiguousKV's granularity alignment: the selected-chunk
+index table is a **scalar-prefetch operand**, so the BlockSpec index_map
+gathers chunk tiles (c=16 x d_head) straight from the HBM chunk pool by
+indirection — the paged-attention pattern. One chunk = one (16, 128) bf16
+tile = the native VMEM granularity, so I/O alignment extends all the way into
+the MXU feed (DESIGN.md §2).
+
+Grid = (n_q_heads, n_sel); online softmax across selected chunks with fp32
+VMEM scratch; per-chunk attention mass (for the attention-guided cache) is
+maintained in scratch with running rescaling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _chunk_attn_kernel(idx_ref, nvalid_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_ref, l_ref, mass_ref,
+                       m_scr, l_scr, acc_scr, mass_scr, *,
+                       scale: float, n_sel: int, group: int):
+    h = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        mass_scr[...] = jnp.zeros_like(mass_scr)
+
+    @pl.when(j < nvalid_ref[0])
+    def _step():
+        q = q_ref[0].astype(jnp.float32)  # (s, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (c, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s_mat = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+        m_prev = m_scr[...]
+        m_cur = jnp.max(s_mat, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s_mat - m_new)  # (s, c)
+        alpha = jnp.exp(m_prev - m_new)  # (s, 1)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        # per-chunk raw mass with running max-rescale: scale all previous
+        # chunks by the global alpha, then record this chunk's contribution.
+        g_alpha = jnp.exp(jnp.max(m_prev) - jnp.max(m_new))
+        mass_scr[...] = mass_scr[...] * g_alpha
+        mass_scr[0, j] = jnp.sum(p * jnp.exp(m_new - jnp.max(m_new)))
+
+    @pl.when(j == n_sel - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l_scr[...]
+        mass_ref[0] = mass_scr[0]
+
+
+def chunk_attention(
+    q: jax.Array,  # (n_q, s, d)
+    k_pool: jax.Array,  # (m, c, n_kv, d)
+    v_pool: jax.Array,
+    chunk_idx: jax.Array,  # (n_sel,) int32
+    n_valid: jax.Array | int,  # () int32
+    *,
+    interpret: bool = False,
+):
+    """Returns (out (n_q,s,d), m (n_q,s,1), l (n_q,s,1), mass_raw (n_q,n_sel)).
+
+    mass_raw is per-head unnormalized exp-mass relative to each head's final
+    running max; ops.py normalizes by l and sums over heads.
+    """
+    n_q, s, d = q.shape
+    m_chunks, c, n_kv, _ = k_pool.shape
+    group = n_q // n_kv
+    n_sel = chunk_idx.shape[0]
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _chunk_attn_kernel, scale=d ** -0.5, n_sel=n_sel, group=group)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_q, n_sel),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda h, j, idx, nv: (h, 0, 0)),
+            pl.BlockSpec((1, c, 1, d), lambda h, j, idx, nv, g=group: (idx[j], 0, h // g, 0)),
+            pl.BlockSpec((1, c, 1, d), lambda h, j, idx, nv, g=group: (idx[j], 0, h // g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, d), lambda h, j, idx, nv: (h, 0, 0)),
+            pl.BlockSpec((1, s, 1), lambda h, j, idx, nv: (h, 0, 0)),
+            pl.BlockSpec((1, s, 1), lambda h, j, idx, nv: (h, 0, 0)),
+            pl.BlockSpec((1, n_sel), lambda h, j, idx, nv: (h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((s, 1), jnp.float32),
+            pltpu.VMEM((s, 1), jnp.float32),
+            pltpu.VMEM((s, d), jnp.float32),
+            pltpu.VMEM((1, n_sel), jnp.float32),
+        ],
+    )
+    out, m_stat, l_stat, mass = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_q, s, d), q.dtype),
+            jax.ShapeDtypeStruct((n_q, s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_q, s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_q, n_sel), jnp.float32),
+        ],
+        interpret=interpret,
+    )(chunk_idx, n_valid, q, k_pool, v_pool)
+    return out, m_stat, l_stat, mass

@@ -1,0 +1,73 @@
+"""Oracle for gathered-ContiguousChunk prefix attention.
+
+Suffix queries attend to the selected prefix chunks (fully visible). Returns
+the *partial* softmax triple (out, m, l) so the caller can merge with the
+suffix self-attention partial — plus per-chunk attention mass (prefix-relative)
+for the attention-guided cache.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunk_attention_ref(
+    q: jax.Array,  # (n_q, s, d)
+    k_pool: jax.Array,  # (m, c, n_kv, d)
+    v_pool: jax.Array,
+    chunk_idx: jax.Array,  # (n_sel,) int32 (may contain padding)
+    n_valid: int,  # number of valid entries in chunk_idx
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    n_q, s, d = q.shape
+    m_chunks, c, n_kv, _ = k_pool.shape
+    group = n_q // n_kv
+    scale = d ** -0.5
+    n_sel = chunk_idx.shape[0]
+
+    k_sel = k_pool[chunk_idx]  # (n_sel, c, n_kv, d)
+    v_sel = v_pool[chunk_idx]
+    k_flat = k_sel.transpose(2, 0, 1, 3).reshape(n_kv, n_sel * c, d)
+    v_flat = v_sel.transpose(2, 0, 1, 3).reshape(n_kv, n_sel * c, d)
+
+    qg = q.reshape(n_kv, group, s, d).astype(jnp.float32)
+    logits = jnp.einsum("ngsd,ntd->ngst", qg, k_flat.astype(jnp.float32)) * scale
+    valid = (jnp.arange(n_sel) < n_valid)
+    tok_valid = jnp.repeat(valid, c)
+    logits = jnp.where(tok_valid[None, None, None], logits, NEG_INF)
+
+    m_stat = logits.max(axis=-1, keepdims=True)  # (n_kv, group, s, 1)
+    p = jnp.exp(logits - m_stat)
+    l_stat = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("ngst,ntd->ngsd", (p / jnp.maximum(l_stat, 1e-30)).astype(v_flat.dtype), v_flat)
+
+    # per-chunk exp-mass relative to each head's GLOBAL max (matches the
+    # kernel's running-rescale bookkeeping), summed over heads after a
+    # per-head normalization.
+    m_head = logits.max(axis=(2, 3), keepdims=True)  # (n_kv, group, 1, 1)
+    p_head = jnp.exp(logits - m_head)  # (n_kv, group, s, t)
+    raw = p_head.sum(axis=2)  # (n_kv, group, t)
+    raw_chunk = raw.reshape(n_kv, group, n_sel, c).sum(axis=-1)  # (n_kv,g,n_sel)
+    denom = jnp.maximum(raw_chunk.sum(axis=-1, keepdims=True), 1e-30)
+    chunk_mass = (raw_chunk / denom).sum(axis=(0, 1))  # (n_sel,)
+    chunk_mass = jnp.where(jnp.arange(n_sel) < n_valid, chunk_mass, 0.0)
+
+    return (
+        out.reshape(n_q, s, d),
+        m_stat.reshape(n_q, s, 1),
+        l_stat.reshape(n_q, s, 1),
+        chunk_mass,
+    )
+
+
+def merge_partials(out_a, m_a, l_a, out_b, m_b, l_b):
+    """Standard two-partial online-softmax merge. out_*: normalized partials."""
+    m = jnp.maximum(m_a, m_b)
+    wa = l_a * jnp.exp(m_a - m)
+    wb = l_b * jnp.exp(m_b - m)
+    denom = jnp.maximum(wa + wb, 1e-30)
+    out = (out_a.astype(jnp.float32) * wa + out_b.astype(jnp.float32) * wb) / denom
+    return out.astype(out_a.dtype), m, denom

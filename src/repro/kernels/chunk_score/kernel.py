@@ -1,0 +1,118 @@
+"""Pallas TPU chunk-importance kernel (identification stage).
+
+Two tiled passes over the prefix keys, both streaming block_k x d key tiles
+through VMEM:
+  pass 1 — flash-style row stats (running max m, denominator l) per query row;
+  pass 2 — accumulate normalized attention mass per ContiguousChunk, reduced
+           over heads/queries inside VMEM (grid: k-blocks outer, heads inner,
+           so the per-block chunk-score tile is written exactly once).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _stats_kernel(q_ref, k_ref, m_ref, l_ref, m_scr, l_scr, *,
+                  scale: float, n_k_blocks: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (s, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    s_mat = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_mat, axis=-1, keepdims=True))
+    l_scr[...] = jnp.exp(m_prev - m_new) * l_scr[...] + jnp.sum(
+        jnp.exp(s_mat - m_new), axis=-1, keepdims=True)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _done():
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l_scr[...]
+
+
+def _score_kernel(q_ref, k_ref, m_ref, l_ref, a_ref, *,
+                  scale: float, n_heads: int, chunk_tokens: int, block_k: int):
+    h = pl.program_id(1)  # heads innermost: accumulate into one output tile
+
+    @pl.when(h == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (s, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    s_mat = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+    p = jnp.exp(s_mat - m_ref[0]) / jnp.maximum(l_ref[0], 1e-30)  # (s, block_k)
+    tok = jnp.sum(p, axis=0)  # (block_k,)
+    chunk = tok.reshape(block_k // chunk_tokens, chunk_tokens).sum(axis=-1)
+    a_ref[...] = a_ref[...] + chunk[None, :]
+
+
+def chunk_score(
+    q: jax.Array,  # (n_q, s, d)
+    k: jax.Array,  # (n_kv, n_tokens, d), n_tokens % block_k == 0
+    chunk_tokens: int,
+    *,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    n_q, s, d = q.shape
+    n_kv, n, _ = k.shape
+    group = n_q // n_kv
+    block_k = min(block_k, n)
+    assert n % block_k == 0 and block_k % chunk_tokens == 0
+    n_k_blocks = n // block_k
+    scale = d ** -0.5
+
+    m_stat, l_stat = pl.pallas_call(
+        functools.partial(_stats_kernel, scale=scale, n_k_blocks=n_k_blocks),
+        grid=(n_q, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda h, ki: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, ki, g=group: (h // g, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, 1), lambda h, ki: (h, 0, 0)),
+            pl.BlockSpec((1, s, 1), lambda h, ki: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_q, s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_q, s, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((s, 1), jnp.float32),
+            pltpu.VMEM((s, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k)
+
+    chunks_per_block = block_k // chunk_tokens
+    scores = pl.pallas_call(
+        functools.partial(_score_kernel, scale=scale, n_heads=n_q,
+                          chunk_tokens=chunk_tokens, block_k=block_k),
+        grid=(n_k_blocks, n_q),  # k-blocks OUTER, heads inner (accumulation)
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda ki, h: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda ki, h, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, s, 1), lambda ki, h: (h, 0, 0)),
+            pl.BlockSpec((1, s, 1), lambda ki, h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunks_per_block), lambda ki, h: (0, ki)),
+        out_shape=jax.ShapeDtypeStruct((1, n // chunk_tokens), jnp.float32),
+        interpret=interpret,
+    )(q, k, m_stat, l_stat)
+    return scores[0]

@@ -1,0 +1,25 @@
+"""Oracle for ContiguousChunk importance scores (Eq. 1).
+
+A_j = sum over chunk-j tokens of a_i, where a_i is the softmaxed attention
+mass token i receives from the probe queries (summed over heads/queries).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_score_ref(
+    q: jax.Array,  # (n_q, s, d) probe/suffix queries
+    k: jax.Array,  # (n_kv, n_tokens, d) prefix keys (n_tokens = m * c)
+    chunk_tokens: int,
+) -> jax.Array:
+    n_q, s, d = q.shape
+    n_kv, n, _ = k.shape
+    group = n_q // n_kv
+    scale = d ** -0.5
+    qg = q.reshape(n_kv, group, s, d).astype(jnp.float32)
+    logits = jnp.einsum("ngsd,ntd->ngst", qg, k.astype(jnp.float32)) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    a = probs.sum(axis=(0, 1, 2))  # (n,)
+    return a.reshape(n // chunk_tokens, chunk_tokens).sum(axis=-1)

@@ -1,0 +1,100 @@
+"""Pallas TPU paged decode attention (flash-decode over a chunk pool).
+
+One new token's query attends over a logically-contiguous KV stream stored as
+scattered physical pages (= ContiguousChunks); the page table is a
+scalar-prefetch operand so the BlockSpec gathers pages by indirection.
+Online softmax across pages in fp32 VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, page: int,
+                   n_active: int, n_heads: int):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    b = bh // n_heads
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (1, d)
+    k = k_ref[0, 0, :, 0].astype(jnp.float32)  # (page, d)
+    v = v_ref[0, 0, :, 0].astype(jnp.float32)
+    s_mat = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    s_mat = jnp.where(pos < len_ref[b], s_mat, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_mat, axis=-1, keepdims=True))
+    p = jnp.exp(s_mat - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_active - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (b, n_q, d)
+    k_pool: jax.Array,  # (b, n_pages, page, n_kv, d)
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (b, n_active) int32
+    lengths: jax.Array,  # (b,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    b, n_q, d = q.shape
+    _, n_pages, page, n_kv, _ = k_pool.shape
+    n_active = page_table.shape[1]
+    group = n_q // n_kv
+
+    kernel = functools.partial(
+        _decode_kernel, scale=d ** -0.5, page=page, n_active=n_active,
+        n_heads=n_q)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * n_q, n_active),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bh, j, tbl, ln, nh=n_q: (bh // nh, bh % nh, 0)),
+            pl.BlockSpec(
+                (1, 1, page, 1, d),
+                lambda bh, j, tbl, ln, nh=n_q, g=group: (
+                    bh // nh, tbl[bh // nh, j], 0, (bh % nh) // g, 0)),
+            pl.BlockSpec(
+                (1, 1, page, 1, d),
+                lambda bh, j, tbl, ln, nh=n_q, g=group: (
+                    bh // nh, tbl[bh // nh, j], 0, (bh % nh) // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bh, j, tbl, ln, nh=n_q: (bh // nh, bh % nh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n_q, d), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pool, v_pool)
+    return out

@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention as _kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def decode_attention(q, k_pool, v_pool, page_table, lengths, *, use_kernel=True):
+    """q: (b, n_q, d); pools: (b, n_pages, page, n_kv, d); table: (b, n_active)."""
+    if not use_kernel:
+        return decode_attention_ref(q, k_pool, v_pool, page_table, lengths)
+    return _kernel(q, k_pool, v_pool, page_table, lengths,
+                   interpret=_default_interpret())

@@ -1,0 +1,35 @@
+"""Oracle for paged (chunk-pool) decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (b, n_q, d) single-position queries
+    k_pool: jax.Array,  # (b, n_pages, page, n_kv, d)
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (b, n_active) int32 logical->physical
+    lengths: jax.Array,  # (b,) valid token count
+) -> jax.Array:
+    b, n_q, d = q.shape
+    _, n_pages, page, n_kv, _ = k_pool.shape
+    n_active = page_table.shape[1]
+    group = n_q // n_kv
+    scale = d ** -0.5
+
+    k = jnp.take_along_axis(k_pool, page_table[:, :, None, None, None], axis=1)
+    v = jnp.take_along_axis(v_pool, page_table[:, :, None, None, None], axis=1)
+    k = k.reshape(b, n_active * page, n_kv, d)
+    v = v.reshape(b, n_active * page, n_kv, d)
+
+    qg = q.reshape(b, n_kv, group, d).astype(jnp.float32)
+    logits = jnp.einsum("bngd,btnd->bngt", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(n_active * page)
+    mask = pos[None, :] < lengths[:, None]  # (b, T)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngt,btnd->bngd", p.astype(v.dtype), v)
+    return out.reshape(b, n_q, d)

@@ -1,0 +1,117 @@
+"""Pallas TPU causal GQA flash attention (tiled online softmax).
+
+Target: TPU VMEM tiling — block_q x d and block_k x d tiles stream through
+VMEM while fp32 running-max / denominator / accumulator live in VMEM scratch.
+Grid = (batch*q_heads, n_q_blocks, n_k_blocks); the k axis is innermost and
+sequential, which on TPU makes the scratch carry legal across k steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, n_k_blocks: int,
+                  causal: bool, window: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (block_q, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (block_q, block_k)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (b, n_q, s_q, d)
+    k: jax.Array,  # (b, n_kv, s_k, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, n_q, s_q, d = q.shape
+    _, n_kv, s_k, _ = k.shape
+    assert n_q % n_kv == 0
+    group = n_q // n_kv
+    block_q = min(block_q, s_q)
+    block_k = min(block_k, s_k)
+    assert s_q % block_q == 0 and s_k % block_k == 0
+    n_q_blocks = s_q // block_q
+    n_k_blocks = s_k // block_k
+    grid = (b * n_q, n_q_blocks, n_k_blocks)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=d ** -0.5, block_q=block_q, block_k=block_k,
+        n_k_blocks=n_k_blocks, causal=causal, window=window, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, qi, ki, g=group, nh=n_q: ((h % nh) // g + (h // nh) * (nh // g), ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, qi, ki, g=group, nh=n_q: ((h % nh) // g + (h // nh) * (nh // g), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * n_q, s_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        q.reshape(b * n_q, s_q, d),
+        k.reshape(b * n_kv, s_k, d),
+        v.reshape(b * n_kv, s_k, d),
+    ).reshape(b, n_q, s_q, d)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for causal (optionally windowed) GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (b, n_q, s_q, d)
+    k: jax.Array,  # (b, n_kv, s_k, d)
+    v: jax.Array,  # (b, n_kv, s_k, d)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, n_q, s_q, d = q.shape
+    n_kv = k.shape[1]
+    group = n_q // n_kv
+    scale = d ** -0.5
+    qg = q.reshape(b, n_kv, group, s_q, d).astype(jnp.float32)
+    logits = jnp.einsum("bngsd,bntd->bngst", qg, k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(s_q)
+    kpos = jnp.arange(k.shape[2])
+    mask = jnp.ones((s_q, k.shape[2]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngst,bntd->bngsd", p.astype(v.dtype), v)
+    return out.reshape(b, n_q, s_q, d)

@@ -1,0 +1,97 @@
+"""Pallas TPU fused selective scan (mamba-1, dt_rank=1).
+
+The XLA-level chunked `associative_scan` materializes (b, chunk, d_in, n)
+state-expansion tensors in HBM every level — the dominant memory term of the
+falcon-mamba train cells (§Perf B). This kernel keeps the recurrent state
+(d_block, n) resident in VMEM across the whole sequence: HBM traffic drops to
+reading x/dt/B/C tiles once and writing y once.
+
+Grid = (b, d_in_blocks, s_blocks); the sequence axis is innermost and
+sequential, so the VMEM scratch carries h across s-blocks; within a block a
+fori_loop steps the recurrence on VMEM-resident tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, B_ref, C_ref, A_ref, y_ref, hout_ref,
+                 h_scr, *, block_s: int, n_s_blocks: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (block_s, d_blk)
+    dt = dt_ref[0].astype(jnp.float32)  # (block_s, 1)
+    Bm = B_ref[0].astype(jnp.float32)  # (block_s, n)
+    Cm = C_ref[0].astype(jnp.float32)
+    A = A_ref[...].astype(jnp.float32)  # (d_blk, n)
+
+    def step(t, carry):
+        h = carry
+        dA = jnp.exp(dt[t, 0] * A)  # (d_blk, n)
+        dBx = (dt[t, 0] * x[t])[:, None] * Bm[t][None, :]
+        h = dA * h + dBx
+        y_t = jax.lax.dot_general(h, Cm[t][:, None], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)[:, 0]
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(si == n_s_blocks - 1)
+    def _done():
+        hout_ref[0] = h_scr[...]
+
+
+def selective_scan(
+    x: jax.Array,  # (b, s, d_in)
+    dt: jax.Array,  # (b, s)
+    A: jax.Array,  # (d_in, n)
+    B: jax.Array,  # (b, s, n)
+    C: jax.Array,  # (b, s, n)
+    *,
+    block_s: int = 128,
+    block_d: int = 512,
+    interpret: bool = False,
+):
+    """Returns (y (b, s, d_in) fp32, h_final (b, d_in, n) fp32)."""
+    b, s, d_in = x.shape
+    n = A.shape[1]
+    block_s = min(block_s, s)
+    block_d = min(block_d, d_in)
+    assert s % block_s == 0 and d_in % block_d == 0
+    n_s = s // block_s
+    n_d = d_in // block_d
+
+    kernel = functools.partial(_scan_kernel, block_s=block_s, n_s_blocks=n_s)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(b, n_d, n_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, block_s, 1), lambda bi, di, si: (bi, si, 0)),
+            pl.BlockSpec((1, block_s, n), lambda bi, di, si: (bi, si, 0)),
+            pl.BlockSpec((1, block_s, n), lambda bi, di, si: (bi, si, 0)),
+            pl.BlockSpec((block_d, n), lambda bi, di, si: (di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, block_d, n), lambda bi, di, si: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d_in), jnp.float32),
+            jax.ShapeDtypeStruct((b, d_in, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt[..., None], B, C, A)
+    return y, h_final

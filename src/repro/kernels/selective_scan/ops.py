@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the fused selective scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.selective_scan.kernel import selective_scan as _kernel
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_s", "block_d", "use_kernel"))
+def selective_scan(x, dt, A, B, C, *, block_s=128, block_d=512, use_kernel=True):
+    """x: (b, s, d_in); dt: (b, s); A: (d_in, n); B/C: (b, s, n)."""
+    if not use_kernel:
+        return selective_scan_ref(x, dt, A, B, C)
+    return _kernel(x, dt, A, B, C, block_s=block_s, block_d=block_d,
+                   interpret=_default_interpret())

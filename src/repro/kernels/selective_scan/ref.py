@@ -1,0 +1,37 @@
+"""Oracle for the fused selective scan (mamba-1 recurrence, dt_rank=1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(
+    x: jax.Array,  # (b, s, d_in)
+    dt: jax.Array,  # (b, s)   softplus'd, broadcast over channels
+    A: jax.Array,  # (d_in, n) negative-definite diagonal
+    B: jax.Array,  # (b, s, n)
+    C: jax.Array,  # (b, s, n)
+):
+    """y[t] = C[t] . h[t],  h[t] = exp(dt[t] A) h[t-1] + dt[t] B[t] x[t].
+
+    Returns (y (b, s, d_in) fp32, h_final (b, d_in, n) fp32).
+    """
+    b, s, d_in = x.shape
+    n = A.shape[1]
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (b,d), (b,), (b,n), (b,n)
+        dA = jnp.exp(dt_t[:, None, None] * A[None])  # (b, d, n)
+        h = dA * h + (dt_t[:, None] * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    xs = (
+        x.astype(jnp.float32).transpose(1, 0, 2),
+        dt.astype(jnp.float32).transpose(1, 0),
+        B.astype(jnp.float32).transpose(1, 0, 2),
+        C.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_final

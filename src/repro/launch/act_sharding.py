@@ -1,0 +1,98 @@
+"""Activation-sharding policy: trace-time hints for GSPMD.
+
+Model code stays sharding-agnostic; when a policy is active (the dry-run /
+launcher installs one around tracing), `constrain(x, role)` pins activation
+shardings:
+
+  hidden  (b, s, d)      -> P(dp, None, None)
+  heads   (b, s, H, dh)  -> P(dp, None, 'model', None)  if H >= model axis
+                            (GSPMD pads non-divisible H: 40->48 etc.)
+                         -> P(dp, 'model', None, None)  otherwise (sequence
+                            parallelism: few-head archs shard attention by
+                            q-position instead of heads)
+
+Without an active policy every call is a no-op, so unit tests and CPU smoke
+runs never touch mesh machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_POLICY: contextvars.ContextVar = contextvars.ContextVar(
+    "act_sharding_policy", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    mesh: object
+    dp: Tuple[str, ...]
+    tp: Tuple[str, ...]  # full tensor axis(es)
+    kv: Tuple[str, ...]  # kv-head sub-axis (== tp on a flat mesh)
+    shard_batch: bool = True  # False for batch=1 cells
+    seq_parallel: bool = False  # Megatron-SP: hidden states shard seq over TP
+
+    def _size(self, axes) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return self._size(self.tp)
+
+    @property
+    def kv_size(self) -> int:
+        return self._size(self.kv)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, *, shard_batch: bool = True,
+                        seq_parallel: bool = False):
+    from repro.launch.mesh import dp_axes, kv_axes, tp_axes
+
+    token = _POLICY.set(Policy(mesh=mesh, dp=dp_axes(mesh),
+                               tp=tp_axes(mesh), kv=kv_axes(mesh),
+                               shard_batch=shard_batch,
+                               seq_parallel=seq_parallel))
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def current_policy() -> Optional[Policy]:
+    return _POLICY.get()
+
+
+def constrain(x: jax.Array, role: str) -> jax.Array:
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    dp = pol.dp if pol.shard_batch else None
+    if role == "hidden" and x.ndim == 3:
+        # seq-parallel: norms/residual/elementwise run on s/TP tokens per
+        # device; the qkv/ffn projections re-gather (cheap all-gather) while
+        # per-device elementwise HBM traffic drops by the TP degree.
+        spec = (P(dp, pol.tp, None) if pol.seq_parallel and x.shape[1] > 1
+                else P(dp, None, None))
+    elif role == "heads" and x.ndim == 4:
+        b, s, h, d = x.shape
+        if h % pol.kv_size == 0 and h < pol.tp_size:
+            spec = P(dp, None, pol.kv, None)  # exact kv-head sharding
+        elif h >= pol.tp_size:
+            spec = P(dp, None, pol.tp, None)  # (padded) full head sharding
+        elif s > 1:
+            spec = P(dp, pol.tp, None, None)  # sequence parallelism
+        else:
+            spec = P(dp, None, None, None)
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(pol.mesh, spec))

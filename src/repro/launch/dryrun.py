@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+
+Per cell it records compiled.memory_analysis() (fits-in-HBM proof),
+cost_analysis(), and the HLO-parsed roofline terms (launch/roofline.py).
+NOTE: the two XLA_FLAGS lines above MUST run before any other import.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, input_specs, model_flops_global
+from repro.launch.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_sparse_decode_step,
+    make_train_step,
+)
+
+
+def build_step(cfg, shape_name: str, *, sparse: bool = False,
+               cached_summaries: bool = False, sharded_sparse: bool = False,
+               mesh=None,
+               grad_accum: Optional[int] = None, remat="nothing",
+               block_q: int = 512):
+    spec = SHAPES[shape_name]
+    if spec.kind == "train":
+        ga = grad_accum if grad_accum is not None else spec.grad_accum
+        fn = make_train_step(cfg, grad_accum=ga, remat=remat, block_q=block_q)
+        donate = (0, 1)
+    elif spec.kind == "prefill":
+        fn = make_prefill_step(cfg, block_q=block_q)
+        donate = (2,)
+    else:
+        if sharded_sparse and cfg.has_attention:
+            from repro.launch.sharded_sparse import make_sharded_sparse_decode_step
+            fn = make_sharded_sparse_decode_step(cfg, mesh, chunk_tokens=16,
+                                                 budget=0.05)
+        elif sparse and cfg.has_attention:
+            fn = make_sparse_decode_step(cfg, chunk_tokens=16, budget=0.05,
+                                         cached_summaries=cached_summaries)
+        else:
+            fn = make_decode_step(cfg)
+        donate = (2,)
+    return fn, donate
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             sparse: bool = False, cached_summaries: bool = False,
+             sharded_sparse: bool = False,
+             grad_accum: Optional[int] = None,
+             remat="nothing", fsdp: bool = True, kv_split: int = 0,
+             seq_parallel: bool = False,
+             ssm_chunk: Optional[int] = None, ssm_bf16: bool = False,
+             moe_cf: Optional[float] = None,
+             out_dir: Optional[str] = None,
+             hw: RL.Hardware = RL.Hardware()) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    overrides = {}
+    if ssm_chunk:
+        overrides["ssm_chunk"] = ssm_chunk
+    if ssm_bf16:
+        overrides["ssm_scan_dtype"] = "bfloat16"
+    if moe_cf:
+        overrides["moe_capacity_factor"] = moe_cf
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"),
+                                kv_split=kv_split)
+    n_dev = mesh.devices.size
+    spec = SHAPES[shape_name]
+    t0 = time.time()
+    fn, donate = build_step(cfg, shape_name, sparse=sparse,
+                            cached_summaries=cached_summaries,
+                            sharded_sparse=sharded_sparse, mesh=mesh,
+                            grad_accum=grad_accum, remat=remat)
+    args = input_specs(cfg, shape_name, mesh, fsdp=fsdp,
+                       sparse_summaries=(sparse and cached_summaries)
+                       or sharded_sparse)
+    from repro.launch.act_sharding import activation_sharding
+
+    spec_b = SHAPES[shape_name]
+    with mesh, activation_sharding(mesh, shard_batch=spec_b.batch >= 16,
+                                   seq_parallel=seq_parallel):
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+    t_compile = time.time() - t0
+
+    analyzer = RL.HloAnalyzer(text)
+    metrics = analyzer.entry_metrics()
+    mf_dev = model_flops_global(cfg, shape_name) / n_dev
+    bytes_dev = float(mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                      + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    variant = ""
+    if sharded_sparse:
+        variant += "~shsparse"
+    if sparse:
+        variant += "~sparse"
+    if cached_summaries:
+        variant += "~csum"
+    if not fsdp:
+        variant += "~nofsdp"
+    if remat == "dots":
+        variant += "~dots"
+    if ssm_chunk:
+        variant += f"~ssmc{ssm_chunk}"
+    if ssm_bf16:
+        variant += "~ssmbf16"
+    if moe_cf:
+        variant += f"~cf{moe_cf}"
+    if grad_accum is not None:
+        variant += f"~ga{grad_accum}"
+    if kv_split:
+        variant += f"~kv{kv_split}"
+    if seq_parallel:
+        variant += "~sp"
+    report = RL.roofline(
+        metrics, arch=arch, shape=shape_name + variant,
+        mesh=mesh_kind, model_flops_per_device=mf_dev,
+        bytes_per_device=bytes_dev, hw=hw,
+        note=f"compile={t_compile:.1f}s devices={n_dev}")
+    row = report.to_dict()
+    row.update(
+        ok=True,
+        compile_s=t_compile,
+        devices=n_dev,
+        arg_bytes=int(mem.argument_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        out_bytes=int(mem.output_size_in_bytes),
+        alias_bytes=int(mem.alias_size_in_bytes),
+        cost_flops=float(cost.get("flops", 0.0)),
+        cost_bytes=float(cost.get("bytes accessed", 0.0)),
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}{variant}_{mesh_kind}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(row, f, indent=1)
+    return row
+
+
+def fmt_row(r: Dict[str, Any]) -> str:
+    if not r.get("ok"):
+        return f"{r['arch']:22s} {r['shape']:14s} {r['mesh']:6s} FAILED: {r['error'][:90]}"
+    return (f"{r['arch']:22s} {r['shape']:14s} {r['mesh']:6s} "
+            f"fl/dev={r['flops']:.3e} hbm={r['hbm_bytes']:.3e} "
+            f"coll={sum(r['coll_bytes'].values()):.3e} "
+            f"tc={r['t_compute']*1e3:.2f}ms tm={r['t_memory']*1e3:.2f}ms "
+            f"tx={r['t_collective']*1e3:.2f}ms dom={r['dominant']:10s} "
+            f"useful={r['useful_ratio']:.2f} mem/dev={r['bytes_per_device']/1e9:.2f}GB "
+            f"[{r['note']}]")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    p.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--sparse", action="store_true",
+                   help="lower the ContiguousKV sparse decode for decode shapes")
+    p.add_argument("--cached-summaries", action="store_true",
+                   help="sparse decode with resident chunk-mean summaries")
+    p.add_argument("--sharded-sparse", action="store_true",
+                   help="shard_map per-shard top-k sparse decode (§Perf C4)")
+    p.add_argument("--no-fsdp", action="store_true",
+                   help="replicate weights over data (drop ZeRO-3 gathers)")
+    p.add_argument("--remat", default="nothing", choices=["nothing", "dots", "off"])
+    p.add_argument("--kv-split", type=int, default=0,
+                   help="GQA-aware mesh: factor the 16-way TP axis into (kv, rep)")
+    p.add_argument("--seq-parallel", action="store_true",
+                   help="Megatron-SP activation sharding (hidden seq over TP)")
+    p.add_argument("--ssm-chunk", type=int, default=None)
+    p.add_argument("--ssm-bf16", action="store_true")
+    p.add_argument("--moe-cf", type=float, default=None,
+                   help="MoE capacity factor override (memory knob)")
+    p.add_argument("--grad-accum", type=int, default=None)
+    p.add_argument("--out", default="experiments/dryrun")
+    args = p.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    remat = False if args.remat == "off" else args.remat
+
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                try:
+                    r = run_cell(arch, shape, mesh_kind, sparse=args.sparse,
+                                 cached_summaries=args.cached_summaries,
+                                 sharded_sparse=args.sharded_sparse,
+                                 fsdp=not args.no_fsdp, remat=remat,
+                                 kv_split=args.kv_split,
+                                 seq_parallel=args.seq_parallel,
+                                 ssm_chunk=args.ssm_chunk, ssm_bf16=args.ssm_bf16,
+                                 moe_cf=args.moe_cf,
+                                 grad_accum=args.grad_accum, out_dir=args.out)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    r = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                         "ok": False, "error": f"{type(e).__name__}: {e}",
+                         "traceback": traceback.format_exc()}
+                    if args.out:
+                        os.makedirs(args.out, exist_ok=True)
+                        tag = f"{arch}_{shape}_{mesh_kind}_FAILED"
+                        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                            json.dump(r, f, indent=1)
+                print(fmt_row(r), flush=True)
+                rows.append(r)
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    print(f"\n{n_ok}/{len(rows)} cells compiled OK")
+    return 0 if n_ok == len(rows) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

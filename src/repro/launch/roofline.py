@@ -1,0 +1,416 @@
+"""Roofline analyzer over compiled SPMD HLO text.
+
+`compiled.cost_analysis()` counts a `while` (layer-scan) body ONCE and has no
+collective accounting, so this module parses the optimized HLO itself:
+
+  - per-computation symbol tables (instruction -> shape/dtype),
+  - dot FLOPs (2 * prod(out) * prod(contracting dims)), descending into
+    fusions' called computations,
+  - an HBM-traffic proxy: operand + output bytes of every top-level
+    data-moving instruction (post-fusion, so fused elementwise chains count
+    once),
+  - collective wire bytes per device with ring-model factors, split by
+    replica-group size (group=2 on the multi-pod mesh == cross-pod DCN),
+  - `while` trip counts recovered from the loop-condition constant, so a
+    48-layer scan multiplies its body metrics by 48.
+
+All shapes in SPMD HLO are per-device, so every number here is per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "while", "after-all", "partition-id", "replica-id", "conditional",
+    "call", "custom-call", "rng-bit-generator", "iota", "opt-barrier",
+}
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_SHAPE_RE = re.compile(r"^([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Size of a (possibly tuple) HLO type string."""
+    if type_str.startswith("("):
+        total = 0
+        for m in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", type_str):
+            total += _prim_bytes(m.group(1), m.group(2))
+        return total
+    m = _SHAPE_RE.match(type_str)
+    return _prim_bytes(m.group(1), m.group(2)) if m else 0
+
+
+def _prim_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    raw_ops: str = ""  # raw operand text (constants keep their literal here)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    table: Dict[str, str]  # instr name -> type string
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$", line)
+        if header and not line.startswith(" "):
+            cur = Computation(name=header.group(1), instructions=[], table={})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        # operands: %names inside the first balanced paren section
+        depth, end = 1, 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        op_str, attrs = rest[:end], rest[end + 1:]
+        operands = re.findall(r"%([\w.\-]+)", op_str)
+        instr = Instruction(name=name, type_str=type_str, opcode=opcode,
+                            operands=operands, attrs=attrs, raw_ops=op_str)
+        cur.instructions.append(instr)
+        cur.table[name] = type_str
+    return comps
+
+
+def _called(ins: Instruction) -> List[str]:
+    out = []
+    for key in ("calls=", "condition=", "body=", "to_apply="):
+        for m in re.finditer(re.escape(key) + r"%?([\w.\-]+)", ins.attrs):
+            out.append(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class Metrics:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0  # upper bound: every top-level instruction's I/O
+    hbm_bytes_min: float = 0.0  # perfect-fusion bound: dots/reduces/DMA only
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_by_group: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Metrics", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.hbm_bytes_min += other.hbm_bytes_min * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_by_group.items():
+            self.coll_by_group[k] = self.coll_by_group.get(k, 0.0) + v * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+# ops whose operand/output traffic survives perfect fusion (matmuls, big
+# reductions, data movement); pure elementwise chains are assumed fused into
+# their producers/consumers the way the TPU backend does.
+_ESSENTIAL_OPS = {
+    "dot", "convolution", "reduce", "reduce-window", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "sort", "copy", "transpose",
+    "concatenate", "pad",
+}
+
+# ops that only READ the bytes they output (slicing/gather): counting their
+# full operand would charge a layer-scan 48x for slicing stacked weights.
+_OUTPUT_ONLY_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _instr_bytes(comp: "Computation", ins: "Instruction") -> int:
+    """HBM traffic estimate for one instruction (reads + writes)."""
+    if ins.opcode == "dynamic-update-slice":
+        upd = ins.operands[1] if len(ins.operands) > 1 else None
+        t = comp.table.get(upd)
+        return _shape_bytes(t) if t else 0
+    nbytes = _shape_bytes(ins.type_str)
+    if ins.opcode in _OUTPUT_ONLY_OPS:
+        return 2 * nbytes  # read the sliced region + write it
+    for operand in ins.operands:
+        t = comp.table.get(operand)
+        if t:
+            nbytes += _shape_bytes(t)
+    return nbytes
+
+
+class HloAnalyzer:
+    def __init__(self, text: str, num_partitions: Optional[int] = None):
+        self.comps = parse_hlo(text)
+        self.text = text
+        m = re.search(r"num_partitions=(\d+)", text)
+        self.num_partitions = num_partitions or (int(m.group(1)) if m else 1)
+        self._memo: Dict[str, Metrics] = {}
+
+    def trip_count(self, body_name: str, cond_name: str) -> int:
+        """Scan conditions compare the counter against a constant: find the
+        largest int constant in the condition (searching its fusions too)."""
+        best = 0
+        stack = [cond_name]
+        seen = set()
+        while stack:
+            cname = stack.pop()
+            if cname in seen or cname not in self.comps:
+                continue
+            seen.add(cname)
+            comp = self.comps[cname]
+            for ins in comp.instructions:
+                if ins.opcode == "constant":
+                    m = re.fullmatch(r"\s*(\-?\d+)\s*\)?\s*", ins.raw_ops)
+                    if m:
+                        best = max(best, int(m.group(1)))
+                stack.extend(_called(ins))
+        return max(best, 1)
+
+    # -- recursive metrics ----------------------------------------------------
+    def _dot_flops(self, comp: Computation, ins: Instruction) -> float:
+        out_dims = _shape_dims(ins.type_str)
+        n_out = 1
+        for d in out_dims:
+            n_out *= d
+        lhs = ins.operands[0] if ins.operands else None
+        lhs_type = comp.table.get(lhs, "")
+        lhs_dims = _shape_dims(lhs_type)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        contract = 1
+        if m and lhs_dims:
+            for idx in m.group(1).split(","):
+                if idx:
+                    contract *= lhs_dims[int(idx)]
+        return 2.0 * n_out * contract
+
+    def _collective(self, ins: Instruction, metrics: Metrics):
+        op = ins.opcode.replace("-start", "")
+        if op not in COLLECTIVE_OPS:
+            return
+        size = _shape_bytes(ins.type_str)
+        g = self._group_size(ins)
+        if op == "all-gather":
+            wire = size * (g - 1) / max(g, 1)
+        elif op == "all-reduce":
+            wire = 2.0 * size * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = size * (g - 1)  # size is the post-scatter shard
+        elif op == "all-to-all":
+            wire = size * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            wire = size
+            g = 2
+        metrics.coll_bytes[op] = metrics.coll_bytes.get(op, 0.0) + wire
+        metrics.coll_by_group[g] = metrics.coll_by_group.get(g, 0.0) + wire
+
+    def _group_size(self, ins: Instruction) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", ins.attrs)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([\d,]+)\}", ins.attrs)
+        if m:
+            return len(m.group(1).split(","))
+        return self.num_partitions
+
+    def _fusion_flops(self, comp_name: str) -> float:
+        """Dot FLOPs inside a fusion's called computation (recursively)."""
+        if comp_name not in self.comps:
+            return 0.0
+        memo_key = "flops:" + comp_name
+        if memo_key in self._memo:
+            return self._memo[memo_key].flops
+        comp = self.comps[comp_name]
+        total = 0.0
+        for ins in comp.instructions:
+            if ins.opcode in ("dot", "convolution"):
+                total += self._dot_flops(comp, ins)
+            for c in _called(ins):
+                total += self._fusion_flops(c)
+        self._memo[memo_key] = Metrics(flops=total)
+        return total
+
+    def _essential_bytes(self, comp_name: str) -> float:
+        """Traffic of essential (unfusible) ops inside a called computation."""
+        if comp_name not in self.comps:
+            return 0.0
+        memo_key = "ess:" + comp_name
+        if memo_key in self._memo:
+            return self._memo[memo_key].hbm_bytes_min
+        comp = self.comps[comp_name]
+        total = 0.0
+        for ins in comp.instructions:
+            if ins.opcode in _ESSENTIAL_OPS:
+                total += _instr_bytes(comp, ins)
+            for c in _called(ins):
+                total += self._essential_bytes(c)
+        self._memo[memo_key] = Metrics(hbm_bytes_min=total)
+        return total
+
+    def computation_metrics(self, name: str) -> Metrics:
+        if name in self._memo and not name.startswith("flops:"):
+            return self._memo[name]
+        comp = self.comps[name]
+        m = Metrics()
+        for ins in comp.instructions:
+            op = ins.opcode
+            if op == "while":
+                mm = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                if mm and mc and mm.group(1) in self.comps:
+                    trips = self.trip_count(mm.group(1), mc.group(1))
+                    m.add(self.computation_metrics(mm.group(1)), trips)
+                continue
+            if op in ("dot", "convolution"):
+                m.flops += self._dot_flops(comp, ins)
+            if op.replace("-start", "") in COLLECTIVE_OPS:
+                self._collective(ins, m)
+            if op == "fusion":
+                m.flops += sum(self._fusion_flops(c) for c in _called(ins))
+                m.hbm_bytes_min += sum(self._essential_bytes(c) for c in _called(ins))
+            if op in ("call", "custom-call"):
+                for c in _called(ins):
+                    if c in self.comps:
+                        m.add(self.computation_metrics(c))
+            if op.replace("-start", "") in COLLECTIVE_OPS:
+                m.hbm_bytes_min += _shape_bytes(ins.type_str)
+            # HBM traffic proxy
+            if op not in _SKIP_BYTES and not op.endswith("-done"):
+                nbytes = _instr_bytes(comp, ins)
+                m.hbm_bytes += nbytes
+                if op in _ESSENTIAL_OPS:
+                    m.hbm_bytes_min += nbytes
+        self._memo[name] = m
+        return m
+
+    def entry_metrics(self) -> Metrics:
+        entry = None
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", self.text, re.MULTILINE)
+        if m:
+            entry = m.group(1)
+        else:  # fall back: computation with most instructions
+            entry = max(self.comps, key=lambda c: len(self.comps[c].instructions))
+        return self.computation_metrics(entry)
+
+
+# --------------------------------------------------------------------------
+# roofline terms
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Hardware:
+    peak_flops: float = 197e12  # bf16 / chip (TPU v5e)
+    hbm_bw: float = 819e9  # B/s
+    ici_bw: float = 50e9  # B/s per link
+    dcn_bw: float = 25e9  # B/s per chip cross-pod (assumed)
+    hbm_per_chip: float = 16e9
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float
+    hbm_bytes: float  # fused (TPU-realistic) traffic bound — primary
+    hbm_bytes_upper: float  # every-instruction bound (CPU-backend fusion)
+    coll_bytes: Dict[str, float]
+    coll_by_group: Dict[int, float]
+    t_compute: float
+    t_memory: float  # from the fused bound
+    t_memory_upper: float
+    t_collective: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    bytes_per_device: float
+    note: str = ""
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(
+    metrics: Metrics,
+    *,
+    arch: str,
+    shape: str,
+    mesh: str,
+    model_flops_per_device: float,
+    bytes_per_device: float = 0.0,
+    hw: Hardware = Hardware(),
+    cross_pod_groups: Tuple[int, ...] = (2,),
+    note: str = "",
+) -> RooflineReport:
+    t_c = metrics.flops / hw.peak_flops
+    t_m = metrics.hbm_bytes_min / hw.hbm_bw
+    t_m_up = metrics.hbm_bytes / hw.hbm_bw
+    t_x = 0.0
+    for g, b in metrics.coll_by_group.items():
+        bw = hw.dcn_bw if g in cross_pod_groups else hw.ici_bw
+        t_x += b / bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh,
+        flops=metrics.flops, hbm_bytes=metrics.hbm_bytes_min,
+        hbm_bytes_upper=metrics.hbm_bytes,
+        coll_bytes=dict(metrics.coll_bytes),
+        coll_by_group={int(k): v for k, v in metrics.coll_by_group.items()},
+        t_compute=t_c, t_memory=t_m, t_memory_upper=t_m_up, t_collective=t_x,
+        dominant=dominant,
+        model_flops=model_flops_per_device,
+        useful_ratio=(model_flops_per_device / metrics.flops) if metrics.flops else 0.0,
+        bytes_per_device=bytes_per_device,
+        note=note,
+    )

@@ -1,0 +1,163 @@
+"""Distributed ContiguousKV sparse decode via shard_map (§Perf C4).
+
+Hillclimb C showed the in-graph sparse decode losing to dense split-KV on two
+counts: (1) the global top-k gathers scores across sequence shards, (2) the
+chunk gather crosses shards, and (3) the KV append (dynamic-update-slice at a
+traced index into a sharded dim) triggers GSPMD's involuntary full
+rematerialization.
+
+This variant keeps *everything local*: each sequence shard selects its own
+top-(budget) ContiguousChunks from resident chunk summaries, attends over its
+local selection, and the shards merge softmax partials (the flash-decode
+combine). The KV append masks to the shard owning position `length`, so the
+update indexes an *unsharded local* dim. Selection semantics = per-shard
+top-k, a balanced refinement of global top-k (each shard contributes its
+budget share — union cardinality identical).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.attention import qkv_project
+from repro.models.transformer import _ffn, _logits
+
+NEG_INF = -1e30
+
+
+def _local_sparse_attention(q, k_shard, v_shard, kmean_shard, k_new, v_new,
+                            length, *, cfg: ModelConfig, chunk_tokens: int,
+                            k_sel: int, seq_axes: Tuple[str, ...]):
+    """Per-shard body (runs under shard_map).
+
+    q: (b, 1, H, dh) replicated; k/v_shard: (b, S_local, KV, dh) local;
+    kmean_shard: (b, m_local, KV, dh); k_new/v_new: (b, 1, KV, dh) replicated.
+    Returns (attn out (b, 1, H, dh) merged, new k/v/kmean shards).
+    """
+    b, S_local, n_kv, dh = k_shard.shape
+    m_local = S_local // chunk_tokens
+    # axis_index over the tuple gives the flattened shard index
+    base = jax.lax.axis_index(seq_axes) * S_local
+
+    # -- local KV append (no sharded-dim DUS: the dim is local here) --------
+    local_pos = length - base
+    owns = (local_pos >= 0) & (local_pos < S_local)
+    pos_c = jnp.clip(local_pos, 0, S_local - 1)
+    k_upd = jax.lax.dynamic_update_slice(k_shard, k_new.astype(k_shard.dtype),
+                                         (0, pos_c, 0, 0))
+    v_upd = jax.lax.dynamic_update_slice(v_shard, v_new.astype(v_shard.dtype),
+                                         (0, pos_c, 0, 0))
+    k_shard = jnp.where(owns, k_upd, k_shard)
+    v_shard = jnp.where(owns, v_upd, v_shard)
+    # incremental chunk-summary update
+    kc_idx = pos_c // chunk_tokens
+    delta = (k_new[:, 0] / chunk_tokens).astype(kmean_shard.dtype)
+    km_slice = jax.lax.dynamic_slice(kmean_shard, (0, kc_idx, 0, 0),
+                                     (b, 1, n_kv, dh))
+    km_upd = jax.lax.dynamic_update_slice(kmean_shard, km_slice + delta[:, None],
+                                          (0, kc_idx, 0, 0))
+    kmean_shard = jnp.where(owns, km_upd, kmean_shard)
+
+    # -- local selection from resident summaries ----------------------------
+    group = cfg.n_heads // n_kv
+    scale = dh ** -0.5
+    qg = q.reshape(b, 1, n_kv, group, dh).astype(jnp.float32)
+    s_mean = jnp.einsum("bsngd,bmnd->bnsgm", qg,
+                        kmean_shard.astype(jnp.float32))  # (b,n_kv,1,g,m)
+    chunk_scores = s_mean.sum(axis=(1, 2, 3))  # (b, m_local)
+    cpos = base + jnp.arange(m_local) * chunk_tokens
+    chunk_scores = jnp.where(cpos[None] <= length, chunk_scores, -jnp.inf)
+    _, top_idx = jax.lax.top_k(chunk_scores, k_sel)  # (b, k_sel)
+
+    # -- gather local chunks + masked attention partial ----------------------
+    kcs = k_shard.reshape(b, m_local, chunk_tokens, n_kv, dh)
+    vcs = v_shard.reshape(b, m_local, chunk_tokens, n_kv, dh)
+    kg = jnp.take_along_axis(kcs, top_idx[:, :, None, None, None], axis=1)
+    vg = jnp.take_along_axis(vcs, top_idx[:, :, None, None, None], axis=1)
+    T = k_sel * chunk_tokens
+    kf = kg.reshape(b, T, n_kv, dh)
+    vf = vg.reshape(b, T, n_kv, dh)
+    sel_pos = (base + top_idx[:, :, None] * chunk_tokens
+               + jnp.arange(chunk_tokens)[None, None, :]).reshape(b, T)
+    valid = sel_pos <= length
+
+    logits = jnp.einsum("bsngd,btnd->bngst", qg, kf.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
+    m_loc = logits.max(axis=-1, keepdims=True)  # (b,n_kv,g,1,1)
+    p = jnp.exp(logits - m_loc)
+    l_loc = p.sum(axis=-1, keepdims=True)
+    o_loc = jnp.einsum("bngst,btnd->bngsd", p, vf.astype(jnp.float32))
+
+    # -- flash-decode combine across shards ----------------------------------
+    m_glob = jax.lax.pmax(m_loc, seq_axes)
+    corr = jnp.exp(m_loc - m_glob)
+    l_glob = jax.lax.psum(l_loc * corr, seq_axes)
+    o_glob = jax.lax.psum(o_loc * corr, seq_axes)
+    out = (o_glob / jnp.maximum(l_glob, 1e-30))  # (b,n_kv,g,1,dh)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, cfg.n_heads, dh)
+    return out.astype(q.dtype), k_shard, v_shard, kmean_shard
+
+
+def make_sharded_sparse_decode_step(cfg: ModelConfig, mesh, *,
+                                    chunk_tokens: int = 16,
+                                    budget: float = 0.05):
+    """Sparse decode with per-shard selection; KV seq-sharded over all
+    non-trivial axes of `mesh` except none — uses ("data","model") on the
+    flat mesh or ("data","kv","rep") on the GQA mesh."""
+    assert cfg.has_attention
+    seq_axes = tuple(a for a in mesh.axis_names if a != "pod")
+    n_shards = 1
+    for a in seq_axes:
+        n_shards *= mesh.shape[a]
+
+    def step(params, token, state):
+        h = (token.astype(cfg.activation_dtype()) if token.ndim == 3
+             else params["embed"][token])
+        b = h.shape[0]
+        length = state["length"]
+        S = state["k"].shape[2]
+        S_local = S // n_shards
+        m_local = S_local // chunk_tokens
+        k_sel = max(1, int(budget * m_local))
+        positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(jnp.int32)
+
+        inner = functools.partial(
+            _local_sparse_attention, cfg=cfg, chunk_tokens=chunk_tokens,
+            k_sel=k_sel, seq_axes=seq_axes)
+        kv_spec = P(None, seq_axes, None, None)
+        sharded = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), kv_spec, kv_spec, kv_spec, P(), P(), P()),
+            out_specs=(P(), kv_spec, kv_spec, kv_spec),
+            check_vma=False,
+        )
+
+        xs = {"lp": params["layers"], "k": state["k"], "v": state["v"],
+              "kmean": state["kmean"]}
+
+        def body(carry, x):
+            lp = x["lp"]
+            xn = rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+            q, k_new, v_new = qkv_project(xn, lp, cfg, positions)
+            out, k_s, v_s, km_s = sharded(
+                q, x["k"], x["v"], x["kmean"], k_new, v_new, length)
+            o = jnp.einsum("bshk,hkd->bsd", out, lp["wo"])
+            carry = carry + o
+            carry = _ffn(carry, lp, cfg, dropless=True)
+            return carry, {"k": k_s, "v": v_s, "kmean": km_s}
+
+        h, ys = jax.lax.scan(body, h, xs)
+        new_state = dict(state)
+        new_state["k"], new_state["v"] = ys["k"], ys["v"]
+        new_state["kmean"] = ys["kmean"]
+        new_state["length"] = length + 1
+        logits = _logits(params, h, cfg)
+        return logits, new_state
+
+    return step

@@ -1,0 +1,174 @@
+"""Sharding rules: 2D FSDP(data) x TP for params, DP batch, EP experts.
+
+Two tensor-parallel layouts:
+  flat   mesh (data, model)        — head dims that don't divide 16 fall back
+         to contraction-dim sharding (GSPMD pads activations; repair
+         collectives show up in the roofline);
+  GQA    mesh (data, kv, rep)      — §Perf-optimized: kv-head dims shard
+         exactly on `kv`, q-heads/d_ff/vocab on ("kv","rep"), so GQA archs
+         need no padding and no per-layer k/v all-reduces.
+
+The `pod` axis is pure DP in both layouts.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, kv_axes, tp_axes
+from repro.models.common import ModelConfig
+
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def param_specs(cfg: ModelConfig, mesh, *, fsdp: bool = True) -> Dict[str, Any]:
+    """PartitionSpec pytree matching init_params' structure.
+
+    fsdp=True shards weight d_model/d_ff dims over `data` too (ZeRO-3, used
+    for training and for serving archs whose weights exceed one TP row).
+    Dims that don't divide their axis fall back to contraction-dim sharding
+    (input shardings must divide exactly; the activation-sharding policy
+    re-pins compute)."""
+    d_axis = "data" if fsdp else None
+    TP = tp_axes(mesh)
+    KV = kv_axes(mesh)
+    tp_n = _axis_size(mesh, TP)
+    kv_n = _axis_size(mesh, KV)
+
+    lp: Dict[str, Any] = {}
+    if cfg.has_attention:
+        h_ok = cfg.n_heads % tp_n == 0
+        kv_ok = cfg.n_kv_heads % kv_n == 0
+        lp["wq"] = (P(None, d_axis, TP, None) if h_ok
+                    else P(None, TP, None, d_axis))
+        lp["wk"] = (P(None, d_axis, KV, None) if kv_ok
+                    else P(None, TP, None, d_axis))
+        lp["wv"] = lp["wk"]
+        lp["wo"] = (P(None, TP, None, d_axis) if h_ok
+                    else P(None, None, TP, d_axis))
+        lp["attn_norm"] = P(None, None)
+        if cfg.qkv_bias:
+            lp["bq"] = P(None, TP, None) if h_ok else P(None, None, TP)
+            lp["bk"] = P(None, KV, None) if kv_ok else P(None, None, TP)
+            lp["bv"] = lp["bk"]
+        if cfg.qk_norm:
+            lp["q_norm"] = P(None, None)
+            lp["k_norm"] = P(None, None)
+    if cfg.family in ("ssm", "hybrid"):
+        lp["mamba"] = {
+            "w_in": P(None, d_axis, TP),
+            "conv_w": P(None, None, TP),
+            "conv_b": P(None, TP),
+            "w_x": P(None, TP, None),
+            "dt_bias": P(None),
+            "A_log": P(None, TP, None),
+            "D": P(None, TP),
+            "w_out": P(None, TP, d_axis),
+        }
+        if cfg.family == "ssm":
+            lp["attn_norm"] = P(None, None)
+    if cfg.family == "moe":
+        if cfg.n_experts % tp_n == 0:  # expert parallelism
+            lp["moe"] = {
+                "w_router": P(None, None, None),
+                "w_gate": P(None, TP, d_axis, None),
+                "w_up": P(None, TP, d_axis, None),
+                "w_down": P(None, TP, None, d_axis),
+            }
+        else:  # TP inside each expert (8/40 experts don't divide 16)
+            lp["moe"] = {
+                "w_router": P(None, None, None),
+                "w_gate": P(None, None, d_axis, TP),
+                "w_up": P(None, None, d_axis, TP),
+                "w_down": P(None, None, TP, d_axis),
+            }
+        lp["ffn_norm"] = P(None, None)
+    elif cfg.d_ff and cfg.family != "ssm":
+        lp["w_gate"] = P(None, d_axis, TP)
+        lp["w_up"] = P(None, d_axis, TP)
+        lp["w_down"] = P(None, TP, d_axis)
+        lp["ffn_norm"] = P(None, None)
+    v_ok = cfg.vocab_size % tp_n == 0
+    specs: Dict[str, Any] = {
+        "embed": P(TP, d_axis) if v_ok else P(None, TP),
+        "layers": lp,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(d_axis, TP) if v_ok else P(TP, None)
+    return specs
+
+
+def param_shardings(cfg: ModelConfig, mesh, *, fsdp: bool = True):
+    specs = param_specs(cfg, mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_specs(cfg: ModelConfig, mesh, batch: int, seq: int, *, training: bool):
+    """Shardings for the input batch dict."""
+    dp = dp_axes(mesh)
+    bspec = P(dp, None) if batch >= 16 else P(None, None)
+    out: Dict[str, Any] = {}
+    if cfg.frontend:
+        espec = P(dp, None, None) if batch >= 16 else P(None, None, None)
+        out["embeds"] = NamedSharding(mesh, espec)
+    else:
+        out["tokens"] = NamedSharding(mesh, bspec)
+    if training:
+        out["labels"] = NamedSharding(mesh, bspec)
+    return out
+
+
+def serve_state_shardings(cfg: ModelConfig, mesh, batch: int):
+    """KV/SSM state shardings.
+
+    On the GQA mesh the cache shards by kv-head exactly; on the flat mesh,
+    head counts rarely divide 16 so the cache *sequence* dim shards over
+    the TP axis instead (split-KV / flash-decode). batch>=16 also shards
+    batch over dp; the long_500k cell (batch=1) spreads the sequence over
+    every remaining axis.
+    """
+    dp = dp_axes(mesh)
+    TP = tp_axes(mesh)
+    KV = kv_axes(mesh)
+    kv_ok = (cfg.n_kv_heads % _axis_size(mesh, KV) == 0) if cfg.has_attention else False
+    out: Dict[str, Any] = {"length": NamedSharding(mesh, P())}
+    if cfg.has_attention:
+        if batch >= 16:
+            spec = (P(None, dp, None, KV, None) if kv_ok
+                    else P(None, dp, TP, None, None))
+        else:
+            if kv_ok:
+                seq_axes = tuple(dp) + (("rep",) if "rep" in mesh.axis_names else ())
+                spec = P(None, None, seq_axes, KV, None)
+            else:
+                seq_axes = tuple(dp) + TP
+                spec = P(None, None, seq_axes, None, None)
+        out["k"] = NamedSharding(mesh, spec)
+        out["v"] = NamedSharding(mesh, spec)
+    if cfg.family in ("ssm", "hybrid"):
+        baxis = dp if batch >= 16 else None
+        out["ssm_h"] = NamedSharding(mesh, P(None, baxis, TP, None))
+        out["ssm_conv"] = NamedSharding(mesh, P(None, baxis, None, TP))
+    return out
+
+
+def opt_state_shardings(param_sh):
+    """Adam m/v mirror the parameter shardings; step counter replicated."""
+    return {
+        "m": param_sh,
+        "v": param_sh,
+        "step": None,  # filled by caller with a replicated sharding
+    }

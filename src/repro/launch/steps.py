@@ -1,0 +1,191 @@
+"""Jittable step factories: train_step (grad-accum + remat + AdamW),
+prefill_step, decode_step, and the ContiguousKV sparse serve step.
+
+These are what the dry-run lowers and the roofline analyzer consumes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.train.optimizer import adamw_update
+from repro.train import compression as GC
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    grad_accum: int = 1,
+    block_q: int = 512,
+    remat: bool = True,
+    lr: float = 3e-4,
+    grad_compression: Optional[str] = None,  # None | "int8"
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Gradient accumulation scans over `grad_accum` microbatches (the leading
+    batch dim must divide), keeping fp32 accumulators — the standard way to
+    fit long-sequence activations in HBM alongside sharded optimizer state.
+    """
+
+    def loss(p, mb):
+        return T.loss_fn(p, mb, cfg, block_q=block_q, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            def slice_mb(x, i):
+                mb = x.shape[0] // grad_accum
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+
+            def acc_body(carry, i):
+                acc, lsum = carry
+                mb = jax.tree_util.tree_map(lambda x: slice_mb(x, i), batch)
+                l_i, g_i = jax.value_and_grad(loss)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, g_i)
+                return (acc, lsum + l_i), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(
+                acc_body, (zeros, 0.0), jnp.arange(grad_accum))
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            l = lsum / grad_accum
+        if grad_compression == "int8":
+            grads = GC.quantize_dequantize_tree(grads)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+        return new_params, new_opt, {"loss": l}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, block_q: int = 512):
+    """prefill_step(params, batch, state) -> (first-token logits, state)."""
+
+    def prefill_step(params, batch, state):
+        return T.prefill(params, batch, cfg, state, block_q=block_q)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode_step(params, token, state) -> (logits, state)."""
+
+    def decode_step(params, token, state):
+        return T.decode_step(params, token, cfg, state)
+
+    return decode_step
+
+
+def make_sparse_decode_step(cfg: ModelConfig, *, chunk_tokens: int = 16,
+                            budget: float = 0.05,
+                            cached_summaries: bool = False):
+    """ContiguousKV-sparse decode: one new token attends to only the
+    top-(budget) ContiguousChunks of the cached context per layer.
+
+    This is the technique-representative serve lowering (used for the
+    long_500k cells of attention archs): per layer, chunk scores from the
+    query against chunk-mean keys select chunks; attention runs over the
+    selected chunk positions only. Selection is in-graph (top_k + gather),
+    so it lowers/shards like any other step.
+
+    ``cached_summaries=True`` is the §Perf-optimized variant: chunk-mean key
+    summaries live in the serve state (``kmean``) and are updated
+    incrementally, so identification reads m x n_kv x d summary bytes instead
+    of re-reading (and re-reducing) the full K cache every step — the in-graph
+    analogue of ContiguousKV keeping chunk metadata resident.
+    """
+    assert cfg.has_attention
+
+    def sparse_decode_step(params, token, state):
+        from repro.models.attention import qkv_project, _grouped_scores, _grouped_out
+        from repro.models.layers import rms_norm
+        from repro.models.transformer import _ffn, _logits, _inputs_to_h
+
+        if token.ndim == 3:
+            h = token.astype(cfg.activation_dtype())
+        else:
+            h = params["embed"][token]
+        b = h.shape[0]
+        length = state["length"]
+        S = state["k"].shape[2]
+        m_chunks = S // chunk_tokens
+        k_sel_count = max(1, int(budget * m_chunks))
+        positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(jnp.int32)
+        windows = jnp.asarray(cfg.window_sizes())
+
+        xs = {"lp": params["layers"], "window": windows,
+              "k": state["k"], "v": state["v"]}
+        if cached_summaries:
+            xs["kmean"] = state["kmean"]
+
+        def body(carry, x):
+            lp = x["lp"]
+            xn = rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+            q, k_new, v_new = qkv_project(xn, lp, cfg, positions)
+            k_cache = jax.lax.dynamic_update_slice(
+                x["k"], k_new.astype(x["k"].dtype), (0, length, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                x["v"], v_new.astype(x["v"].dtype), (0, length, 0, 0))
+
+            kc = k_cache.reshape(b, m_chunks, chunk_tokens, cfg.n_kv_heads, cfg.d_head)
+            if cached_summaries:
+                # incremental summary update: the appended key contributes
+                # 1/c of its chunk's mean; full K is never re-read.
+                delta = (k_new[:, 0] / chunk_tokens).astype(x["kmean"].dtype)
+                k_mean = jax.lax.dynamic_update_slice(
+                    x["kmean"],
+                    (jax.lax.dynamic_slice(
+                        x["kmean"], (0, length // chunk_tokens, 0, 0),
+                        (b, 1, cfg.n_kv_heads, cfg.d_head)) + delta[:, None]),
+                    (0, length // chunk_tokens, 0, 0))
+            else:
+                k_mean = kc.mean(axis=2)  # re-reads the whole K cache
+            scores = _grouped_scores(q, k_mean)  # (b, n_q, 1, m)
+            chunk_scores = scores.astype(jnp.float32).sum(axis=(1, 2))  # (b, m)
+            # mask chunks beyond current length
+            cpos = jnp.arange(m_chunks) * chunk_tokens
+            chunk_scores = jnp.where(cpos[None] < length + 1, chunk_scores, -jnp.inf)
+            _, top_idx = jax.lax.top_k(chunk_scores, k_sel_count)  # (b, k_sel)
+
+            # gather selected chunks: (b, k_sel, c, n_kv, d)
+            kg = jnp.take_along_axis(
+                kc, top_idx[:, :, None, None, None], axis=1)
+            vg = jnp.take_along_axis(
+                v_cache.reshape(kc.shape), top_idx[:, :, None, None, None], axis=1)
+            k_flat = kg.reshape(b, k_sel_count * chunk_tokens, cfg.n_kv_heads, cfg.d_head)
+            v_flat = vg.reshape(b, k_sel_count * chunk_tokens, cfg.n_kv_heads, cfg.d_head)
+
+            # mask: positions within selected chunks beyond `length` are invalid
+            sel_pos = (top_idx[:, :, None] * chunk_tokens
+                       + jnp.arange(chunk_tokens)[None, None, :]).reshape(b, -1)
+            valid = sel_pos <= length  # (b, k_sel*c)
+            att = _grouped_scores(q, k_flat).astype(jnp.float32) * (cfg.d_head ** -0.5)
+            att = jnp.where(valid[:, None, None, :], att, -1e30)
+            p = jax.nn.softmax(att, axis=-1).astype(v_flat.dtype)
+            attn = _grouped_out(p, v_flat)
+            out = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"])
+            carry = carry + out
+            carry = _ffn(carry, lp, cfg, dropless=True)
+            ys = {"k": k_cache, "v": v_cache}
+            if cached_summaries:
+                ys["kmean"] = k_mean
+            return carry, ys
+
+        h, ys = jax.lax.scan(body, h, xs)
+        new_state = dict(state)
+        new_state["k"], new_state["v"] = ys["k"], ys["v"]
+        if cached_summaries:
+            new_state["kmean"] = ys["kmean"]
+        new_state["length"] = length + 1
+        logits = T._logits(params, h, cfg)
+        return logits, new_state
+
+    return sparse_decode_step

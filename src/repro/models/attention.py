@@ -1,0 +1,144 @@
+"""Attention: GQA prefill (block-wise, memory-bounded), decode w/ KV cache.
+
+Prefill uses a query-block scan so peak score memory is block_q x seq_k rather
+than seq^2 — required for the 32k-prefill dry-run cells to fit HBM.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (b, sq, n_q, d) k: (b, sk, n_kv, d) -> scores (b, n_q, sq, sk) for GQA."""
+    b, sq, n_q, d = q.shape
+    n_kv = k.shape[2]
+    group = n_q // n_kv
+    qg = q.reshape(b, sq, n_kv, group, d)
+    s = jnp.einsum("bsngd,btnd->bngst", qg, k)  # (b, n_kv, group, sq, sk)
+    return s.reshape(b, n_q, sq, k.shape[1])
+
+
+def _grouped_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: (b, n_q, sq, sk) v: (b, sk, n_kv, d) -> (b, sq, n_q, d)."""
+    b, n_q, sq, sk = p.shape
+    n_kv = v.shape[2]
+    group = n_q // n_kv
+    pg = p.reshape(b, n_kv, group, sq, sk)
+    o = jnp.einsum("bngst,btnd->bsngd", pg, v)
+    return o.reshape(b, sq, n_q, v.shape[3])
+
+
+def attention_prefill(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: jax.Array | int = 0,
+    block_q: int = 512,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention.
+
+    q: (b, s, n_q, d); k, v: (b, s, n_kv, d). `window` 0 means full causal;
+    a traced scalar is allowed (per-layer window inside a layer scan).
+    Returns (b, s, n_q, d).
+    """
+    b, s, n_q, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    window = jnp.asarray(window, jnp.int32)
+
+    pad = (-s) % block_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_blocks = q.shape[1] // block_q
+    qb = q.reshape(b, n_blocks, block_q, n_q, d).transpose(1, 0, 2, 3, 4)
+
+    kpos = jnp.arange(s, dtype=jnp.int32)
+
+    def one_block(carry, inp):
+        blk_idx, qblk = inp
+        qpos = blk_idx * block_q + jnp.arange(block_q, dtype=jnp.int32)
+        scores = _grouped_scores(qblk, k).astype(jnp.float32) * scale
+        causal = kpos[None, :] <= qpos[:, None]
+        in_window = jnp.where(
+            window > 0, qpos[:, None] - kpos[None, :] < window, True
+        )
+        mask = causal & in_window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return carry, _grouped_out(p, v)
+
+    # checkpoint per q-block: the scan's backward would otherwise stash the
+    # (block_q, seq_k) probability tensors for every block (§Perf A4) —
+    # recomputing them costs compute (the cheap term) instead of HBM.
+    one_block = jax.checkpoint(
+        one_block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    _, outs = jax.lax.scan(
+        one_block, 0, (jnp.arange(n_blocks, dtype=jnp.int32), qb)
+    )
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n_blocks * block_q, n_q, d)
+    return out[:, :s]
+
+
+def attention_decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    length: jax.Array | int,
+    window: jax.Array | int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-step decode. q: (b, 1, n_q, d); caches: (b, S, n_kv, d).
+
+    `length` = number of valid cache positions (the new token's KV must already
+    be written at position length-1).
+    """
+    b, _, n_q, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    S = k_cache.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    window = jnp.asarray(window, jnp.int32)
+    valid = pos < length
+    in_window = jnp.where(window > 0, (length - 1) - pos < window, True)
+    mask = valid & in_window
+
+    scores = _grouped_scores(q, k_cache).astype(jnp.float32) * scale  # (b,nq,1,S)
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    return _grouped_out(p, v_cache)
+
+
+def qkv_project(
+    x: jax.Array,
+    p: dict,
+    cfg,
+    positions: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project hidden states to rotary-embedded Q, K and V."""
+    from repro.launch.act_sharding import constrain
+
+    b, s, _ = x.shape
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), "heads")
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), "heads")
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), "heads")
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v

@@ -1,0 +1,22 @@
+"""Modality frontends for [audio]/[vlm] archs — STUBS per assignment spec.
+
+The transformer backbone is the assigned architecture; the EnCodec tokenizer /
+InternViT vision tower are represented by precomputed frame/patch embeddings.
+`make_frontend_embeds` produces real arrays (smoke tests);
+`frontend_embed_spec` produces ShapeDtypeStructs (dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frontend_embed_spec(cfg, batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.activation_dtype())
+
+
+def make_frontend_embeds(key, cfg, batch: int, seq: int) -> jax.Array:
+    scale = cfg.d_model ** -0.5
+    return (scale * jax.random.normal(key, (batch, seq, cfg.d_model))).astype(
+        cfg.activation_dtype()
+    )

@@ -1,0 +1,49 @@
+"""Primitive layers: RMSNorm, RoPE, SwiGLU — pure jnp, dtype-aware."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm: fp32 *accumulation* for the variance, bf16 tensors otherwise.
+
+    Materializing the full fp32 copy of x (the naive `x.astype(f32)` impl)
+    dominated train-step HBM traffic (§Perf A4): only the reduction runs in
+    fp32 here; the normalized product stays in the input dtype, so forward
+    and cotangent tensors are bf16.
+    """
+    dtype = x.dtype
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    scale = jax.lax.rsqrt(var + eps).astype(dtype)
+    return x * scale * (1.0 + weight.astype(dtype))
+
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    """(d_head/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.
+
+    x: (..., seq, n_heads, d_head); positions: (..., seq) int32.
+    Angles are computed in fp32 (position precision matters at 500k ctx) but
+    the rotation multiplies in the input dtype — the fp32 copies of the full
+    q/k tensors were ~12% of train-step HBM traffic (§Perf A4).
+    """
+    d_head = x.shape[-1]
+    inv_freq = rope_frequencies(d_head, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, d/2)
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)  # (..., seq, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU FFN: down( silu(x@gate) * (x@up) )."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)

@@ -1,0 +1,98 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter dispatch.
+
+Avoids the O(T*E*C) one-hot dispatch einsum: tokens are routed with a
+top-k -> per-expert capacity-bounded index gather, a batched per-expert
+SwiGLU, and a weighted scatter-add combine. Expert dim shards on the
+`model` mesh axis (EP); d_model shards on `data` (FSDP) in training.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _router(x: jax.Array, w_router: jax.Array, top_k: int):
+    """x: (T, d) -> (topk idx (T,k), weights (T,k) fp32 softmaxed over top-k)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)
+    weights = jax.nn.softmax(top_vals, axis=-1)
+    return top_idx, weights
+
+
+def moe_ffn(
+    x: jax.Array,
+    params: dict,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dropless: bool = False,
+) -> jax.Array:
+    """x: (..., d_model). params: w_router (d,E), w_gate/w_up (E,d,f), w_down (E,f,d).
+
+    ``dropless=True`` sets capacity to the worst case (cap = T) — used for
+    decode where T is tiny and token dropping would corrupt generation.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    if dropless:
+        cap = T
+    else:
+        cap = max(1, int(-(-T * top_k * capacity_factor // n_experts)))
+        cap = min(cap, T)
+
+    top_idx, top_w = _router(xt, params["w_router"], top_k)  # (T,k)
+
+    # flatten (token, slot) assignments
+    flat_expert = top_idx.reshape(-1)  # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    flat_w = top_w.reshape(-1)
+
+    # position of each assignment within its expert's queue (stable, fp-free)
+    onehot = jax.nn.one_hot(flat_expert, n_experts, dtype=jnp.int32)  # (T*k, E)
+    pos_in_expert = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=-1)
+    keep = pos_in_expert < cap
+
+    # scatter assignment -> (E, cap) token index table (-1 = empty)
+    slot = flat_expert * cap + pos_in_expert  # (T*k,)
+    slot = jnp.where(keep, slot, n_experts * cap)  # overflow bucket
+    table = jnp.full((n_experts * cap + 1,), T, jnp.int32)  # T = pad token row
+    table = table.at[slot].set(flat_token, mode="drop")
+    gather_idx = table[: n_experts * cap].reshape(n_experts, cap)
+
+    # gather tokens -> (E, cap, d); pad row of zeros at index T
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = xpad[gather_idx]  # (E, cap, d)
+
+    # per-expert SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, cap, d)
+
+    # combine: scatter-add weighted expert outputs back to tokens
+    w_table = jnp.zeros((n_experts * cap + 1,), jnp.float32)
+    w_table = w_table.at[slot].set(flat_w, mode="drop")
+    w_e = w_table[: n_experts * cap].reshape(n_experts, cap)  # (E, cap)
+
+    contrib = (ye.astype(jnp.float32) * w_e[..., None]).reshape(-1, d)
+    flat_gather = gather_idx.reshape(-1)
+    out = jnp.zeros((T + 1, d), jnp.float32).at[flat_gather].add(contrib, mode="drop")
+    return out[:T].astype(x.dtype).reshape(orig_shape)
+
+
+def init_moe_params(key, cfg, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    return {
+        "w_router": (s_in * jax.random.normal(ks[0], (d, E))).astype(dtype),
+        "w_gate": (s_in * jax.random.normal(ks[1], (E, d, f))).astype(dtype),
+        "w_up": (s_in * jax.random.normal(ks[2], (E, d, f))).astype(dtype),
+        "w_down": (s_out * jax.random.normal(ks[3], (E, f, d))).astype(dtype),
+    }

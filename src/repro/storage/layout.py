@@ -1,0 +1,125 @@
+"""On-SSD layouts: where a (layer, unit) lives and what a selection costs.
+
+The paper's granularity argument lives here:
+
+  ContiguousChunkLayout — the storage unit IS the pruning unit (c tokens).
+      Reading one selected chunk reads exactly its bytes: amplification 1.0.
+
+  CoarseBlockLayout — IMPRESS/AttentionStore style: storage unit is a B-token
+      block (B=64). Token-granular selections force whole containing blocks
+      to be read -> read amplification = loaded_bytes / needed_bytes.
+
+Both lay chunks of one layer contiguously, so adjacent selected units coalesce
+into sequential runs (Challenge 1: fine granularity *without* losing the
+device's sequential bandwidth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class KVGeometry:
+    """Byte geometry of one token's KV for one layer."""
+
+    n_kv_heads: int
+    d_head: int
+    bytes_per_el: int = 2  # bf16
+
+    @property
+    def token_bytes(self) -> int:  # K + V
+        return 2 * self.n_kv_heads * self.d_head * self.bytes_per_el
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    """A coalesced contiguous byte range on the device."""
+
+    offset: int
+    nbytes: int
+    units: Tuple[int, ...]  # unit indices covered
+
+
+class BaseLayout:
+    unit_tokens: int
+
+    def __init__(self, n_tokens: int, n_layers: int, geom: KVGeometry, unit_tokens: int):
+        self.n_tokens = n_tokens
+        self.n_layers = n_layers
+        self.geom = geom
+        self.unit_tokens = unit_tokens
+        self.n_units = -(-n_tokens // unit_tokens)
+        self.unit_bytes = unit_tokens * geom.token_bytes
+        self.layer_bytes = self.n_units * self.unit_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.layer_bytes * self.n_layers
+
+    def unit_offset(self, layer: int, unit: int) -> int:
+        return layer * self.layer_bytes + unit * self.unit_bytes
+
+    def coalesce(self, layer: int, units: Sequence[int]) -> List[Run]:
+        """Group sorted unit ids into contiguous runs (one I/O request each)."""
+        if len(units) == 0:
+            return []
+        units = sorted(set(int(u) for u in units))
+        runs: List[Run] = []
+        start = prev = units[0]
+        for u in units[1:]:
+            if u == prev + 1:
+                prev = u
+                continue
+            runs.append(self._run(layer, start, prev))
+            start = prev = u
+        runs.append(self._run(layer, start, prev))
+        return runs
+
+    def _run(self, layer: int, first: int, last: int) -> Run:
+        return Run(
+            offset=self.unit_offset(layer, first),
+            nbytes=(last - first + 1) * self.unit_bytes,
+            units=tuple(range(first, last + 1)),
+        )
+
+
+class ContiguousChunkLayout(BaseLayout):
+    """Paper's layout: storage unit == ContiguousChunk (c tokens)."""
+
+    def __init__(self, n_tokens: int, n_layers: int, geom: KVGeometry, chunk_tokens: int = 16):
+        super().__init__(n_tokens, n_layers, geom, chunk_tokens)
+
+    def units_for_chunks(self, chunk_ids: Sequence[int]) -> List[int]:
+        return sorted(set(int(c) for c in chunk_ids))
+
+    def bytes_needed(self, chunk_ids: Sequence[int]) -> int:
+        return len(set(map(int, chunk_ids))) * self.unit_bytes
+
+
+class CoarseBlockLayout(BaseLayout):
+    """IMPRESS/AS layout: storage unit = B-token block (B=64 in the paper)."""
+
+    def __init__(self, n_tokens: int, n_layers: int, geom: KVGeometry, block_tokens: int = 64):
+        super().__init__(n_tokens, n_layers, geom, block_tokens)
+
+    def units_for_tokens(self, token_ids: Sequence[int]) -> List[int]:
+        return sorted({int(t) // self.unit_tokens for t in token_ids})
+
+    def units_for_chunks(self, chunk_ids: Sequence[int], chunk_tokens: int) -> List[int]:
+        units = set()
+        for c in chunk_ids:
+            first = int(c) * chunk_tokens
+            last = min(first + chunk_tokens, self.n_tokens) - 1
+            units.update(range(first // self.unit_tokens, last // self.unit_tokens + 1))
+        return sorted(units)
+
+    def bytes_needed_tokens(self, token_ids: Sequence[int], geom_bytes: int | None = None) -> int:
+        per_tok = self.geom.token_bytes if geom_bytes is None else geom_bytes
+        return len(set(map(int, token_ids))) * per_tok
+
+
+def read_amplification(loaded_bytes: int, needed_bytes: int) -> float:
+    return loaded_bytes / max(needed_bytes, 1)

@@ -1,0 +1,106 @@
+"""File-backed KV chunk store: the "SSD" tier.
+
+Real mode does actual pread()s through a np.memmap so read amplification and
+coalescing behaviour are measured, not asserted. The store records every read
+(bytes, request count) for the benchmark harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.storage.layout import BaseLayout, Run
+
+
+@dataclasses.dataclass
+class IOStats:
+    bytes_read: int = 0
+    requests: int = 0
+    units_read: int = 0
+
+    def reset(self):
+        self.bytes_read = self.requests = self.units_read = 0
+
+
+class ChunkStore:
+    """KV of one prefix on "SSD": array of (layer, unit) records in one file.
+
+    Record layout per unit: (unit_tokens, 2, n_kv, d_head) in `dtype`
+    (K then V stacked on axis 1).
+    """
+
+    def __init__(self, layout: BaseLayout, dtype=np.float16, path: Optional[str] = None,
+                 in_memory: bool = False):
+        self.layout = layout
+        self.dtype = np.dtype(dtype)
+        g = layout.geom
+        self.unit_shape = (layout.unit_tokens, 2, g.n_kv_heads, g.d_head)
+        self.unit_elems = int(np.prod(self.unit_shape))
+        assert self.unit_elems * self.dtype.itemsize == layout.unit_bytes, (
+            self.unit_elems * self.dtype.itemsize, layout.unit_bytes)
+        self.stats = IOStats()
+        self._in_memory = in_memory
+        if in_memory:
+            self._mem = np.zeros((layout.n_layers, layout.n_units, self.unit_elems), self.dtype)
+            self.path = None
+        else:
+            if path is None:
+                fd, path = tempfile.mkstemp(suffix=".kv", prefix="ckv_")
+                os.close(fd)
+            self.path = path
+            with open(path, "wb") as f:
+                f.truncate(layout.total_bytes)
+            self._mm = np.memmap(path, dtype=self.dtype, mode="r+",
+                                 shape=(layout.n_layers, layout.n_units, self.unit_elems))
+
+    # -- ingest ---------------------------------------------------------------
+    def write_layer(self, layer: int, k: np.ndarray, v: np.ndarray):
+        """k, v: (n_tokens, n_kv, d_head). Pads the tail unit with zeros."""
+        lay = self.layout
+        n, n_kv, dh = k.shape
+        pad = lay.n_units * lay.unit_tokens - n
+        if pad:
+            k = np.concatenate([k, np.zeros((pad, n_kv, dh), k.dtype)], 0)
+            v = np.concatenate([v, np.zeros((pad, n_kv, dh), v.dtype)], 0)
+        kv = np.stack([k, v], axis=1)  # (tokens, 2, n_kv, dh)
+        kv = kv.reshape(lay.n_units, lay.unit_tokens, 2, n_kv, dh).astype(self.dtype)
+        flat = kv.reshape(lay.n_units, self.unit_elems)
+        if self._in_memory:
+            self._mem[layer] = flat
+        else:
+            self._mm[layer] = flat
+            self._mm.flush()
+
+    # -- reads ----------------------------------------------------------------
+    def read_units(self, layer: int, units: Sequence[int]) -> Dict[int, np.ndarray]:
+        """Read units via coalesced runs; returns {unit_id: (c,2,n_kv,dh)}."""
+        runs = self.layout.coalesce(layer, units)
+        out: Dict[int, np.ndarray] = {}
+        for run in runs:
+            first = run.units[0]
+            count = len(run.units)
+            if self._in_memory:
+                data = np.array(self._mem[layer, first : first + count])
+            else:
+                data = np.array(self._mm[layer, first : first + count])
+            for i, u in enumerate(run.units):
+                out[u] = data[i].reshape(self.unit_shape)
+            self.stats.bytes_read += run.nbytes
+            self.stats.requests += 1
+            self.stats.units_read += count
+        return out
+
+    def run_plan(self, layer: int, units: Sequence[int]) -> Tuple[int, int]:
+        """(total bytes, request count) that read_units would incur."""
+        runs = self.layout.coalesce(layer, units)
+        return sum(r.nbytes for r in runs), len(runs)
+
+    def close(self):
+        if not self._in_memory:
+            del self._mm
+            if self.path and os.path.exists(self.path):
+                os.unlink(self.path)

@@ -1,0 +1,38 @@
+"""Gradient compression (QSGD-style int8) for the cross-pod DP all-reduce.
+
+The numerics (per-tensor absmax int8 quantize -> dequantize) are applied
+in-graph before the optimizer; with pjit the gradient reduction itself is
+XLA-managed, so byte savings on the wire require the collective to operate on
+the quantized representation — we expose `compressed_psum` (shard_map path)
+for that, and `quantize_dequantize_tree` as the numerics-only mode used by
+the train step (documented in DESIGN.md: the effect on convergence is real,
+the wire-format saving is modeled).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_dequantize(x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def quantize_dequantize_tree(tree):
+    return jax.tree_util.tree_map(quantize_dequantize, tree)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-on-the-wire all-reduce inside shard_map: each participant sends
+    its quantized gradient (int8 + fp32 scale); the sum happens in fp32 after
+    dequantization via an all-gather of the compact representation."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    qs = jax.lax.all_gather(q, axis_name)  # int8 wire format: 4x fewer bytes
+    ss = jax.lax.all_gather(scale, axis_name)
+    return jnp.sum(qs.astype(jnp.float32) * ss.reshape(-1, *([1] * x.ndim)),
+                   axis=0).astype(x.dtype)

@@ -1,0 +1,101 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import (
+    DEVICE,
+    HOST,
+    AttentionGuidedCache,
+    ImpressScoreCache,
+    LFUCache,
+    LRUCache,
+)
+
+
+class TestAttentionGuidedCache:
+    def test_score_is_importance_times_frequency(self):
+        c = AttentionGuidedCache(4, 4)
+        c.insert((0, 1))
+        c.update_importance((0, 1), 2.5)
+        c.lookup((0, 1))  # F=2 now
+        assert c.priority((0, 1)) == pytest.approx(2.5 * 2)
+
+    def test_eviction_prefers_low_score(self):
+        c = AttentionGuidedCache(2, 0)
+        for u, imp in [(0, 10.0), (1, 1.0), (2, 5.0)]:
+            c.update_importance((0, u), imp)
+            c.insert((0, u))
+        assert (0, 1) not in c.tiers[DEVICE]
+        assert (0, 0) in c.tiers[DEVICE] and (0, 2) in c.tiers[DEVICE]
+
+    def test_device_eviction_demotes_to_host(self):
+        c = AttentionGuidedCache(1, 2)
+        c.update_importance((0, 0), 5.0)
+        c.insert((0, 0))
+        c.update_importance((0, 1), 9.0)
+        c.insert((0, 1))
+        assert (0, 1) in c.tiers[DEVICE] or (0, 0) in c.tiers[DEVICE]
+        assert len(c.tiers[DEVICE]) == 1
+        assert len(c.tiers[HOST]) == 1  # victim demoted, not dropped
+
+    def test_scores_persist_after_full_eviction(self):
+        c = AttentionGuidedCache(1, 0)
+        c.update_importance((0, 0), 5.0)
+        c.insert((0, 0))
+        c.insert((0, 1))  # may evict (0,0) entirely (no host tier)
+        assert c.I[(0, 0)] == 5.0  # in-memory score table survives
+
+    @given(
+        ops=st.lists(
+            st.tuples(st.integers(0, 20), st.floats(0, 10)), min_size=1, max_size=200
+        ),
+        dev_cap=st.integers(1, 8),
+        host_cap=st.integers(0, 8),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_capacity_never_exceeded(self, ops, dev_cap, host_cap):
+        c = AttentionGuidedCache(dev_cap, host_cap)
+        for unit, imp in ops:
+            c.update_importance((0, unit), imp)
+            c.insert((0, unit))
+            assert len(c.tiers[DEVICE]) <= dev_cap
+            assert len(c.tiers[HOST]) <= host_cap
+            assert not (c.tiers[DEVICE] & c.tiers[HOST])  # disjoint tiers
+
+
+class TestBaselinePolicies:
+    def test_lru_evicts_oldest(self):
+        c = LRUCache(2, 0)
+        c.insert((0, 0))
+        c.insert((0, 1))
+        c.lookup((0, 0))  # refresh 0
+        c.insert((0, 2))
+        assert (0, 1) not in c.tiers[DEVICE]
+        assert (0, 0) in c.tiers[DEVICE]
+
+    def test_lfu_evicts_least_frequent(self):
+        c = LFUCache(2, 0)
+        c.insert((0, 0))
+        for _ in range(3):
+            c.lookup((0, 0))
+        c.insert((0, 1))
+        c.insert((0, 2))
+        assert (0, 0) in c.tiers[DEVICE]
+        assert (0, 1) not in c.tiers[DEVICE]
+
+    def test_impress_score_cache(self):
+        c = ImpressScoreCache(2, 0)
+        c.set_static_score((0, 0), 0.9)
+        c.insert((0, 0))
+        c.set_static_score((0, 1), 0.1)
+        c.insert((0, 1))
+        c.set_static_score((0, 2), 0.5)
+        c.insert((0, 2))
+        assert (0, 1) not in c.tiers[DEVICE]
+
+    def test_hit_miss_accounting(self):
+        c = LRUCache(2, 2)
+        assert c.lookup((0, 0)) is None
+        c.insert((0, 0))
+        assert c.lookup((0, 0)) == DEVICE
+        assert c.misses == 1 and c.hits[DEVICE] == 1

@@ -1,0 +1,118 @@
+"""Checkpoint/restart + elastic mesh-reshape restore + FT machinery."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.launch.steps import make_train_step
+from repro.models import transformer as T
+from repro.train.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.ft import FailureInjector, HeartbeatMonitor
+from repro.train.optimizer import adamw_init
+
+
+@pytest.fixture(scope="module")
+def state():
+    cfg = reduced_config("qwen3-1.7b", n_layers=2, dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params, adamw_init(params)
+
+
+def _trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, state, tmp_path):
+        cfg, params, opt = state
+        tree = {"params": params, "opt": opt}
+        save_checkpoint(str(tmp_path), 7, tree)
+        assert latest_step(str(tmp_path)) == 7
+        restored = restore_checkpoint(str(tmp_path), 7, tree)
+        _trees_equal(tree, restored)
+
+    def test_async_save(self, state, tmp_path):
+        cfg, params, opt = state
+        t = save_checkpoint(str(tmp_path), 3, {"params": params}, blocking=False)
+        t.join()
+        assert latest_step(str(tmp_path)) == 3
+
+    def test_manager_retention(self, state, tmp_path):
+        cfg, params, _ = state
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"params": params}, blocking=True)
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                       if d.startswith("step_"))
+        assert steps == [3, 4]
+
+    def test_elastic_restore_onto_different_mesh(self, state, tmp_path):
+        """Save unsharded, restore with explicit shardings on a 1x1 mesh —
+        the same path used when node counts change between runs."""
+        cfg, params, _ = state
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.sharding import param_shardings
+
+        save_checkpoint(str(tmp_path), 1, {"params": params})
+        mesh = make_host_mesh(1, 1)
+        sh = {"params": param_shardings(cfg, mesh, fsdp=True)}
+        restored = restore_checkpoint(str(tmp_path), 1, {"params": params}, sh)
+        _trees_equal({"params": params}, restored)
+        leaf = jax.tree_util.tree_leaves(restored)[0]
+        assert leaf.sharding.mesh.shape["model"] == 1
+
+    def test_restart_resumes_training(self, state, tmp_path):
+        """Kill at step 3 (injected), restart from checkpoint, finish."""
+        cfg, params, opt = state
+        key = jax.random.PRNGKey(1)
+        batch = {
+            "tokens": jax.random.randint(key, (4, 16), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (4, 16), 0, cfg.vocab_size),
+        }
+        step_fn = make_train_step(cfg, grad_accum=1, remat=False, lr=1e-3)
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        injector = FailureInjector(fail_at=[3])
+
+        def run(p, o, start):
+            for s in range(start, 6):
+                injector.maybe_fail(s)
+                p, o, _ = step_fn(p, o, batch)
+                mgr.save(s, {"params": p, "opt": o}, blocking=True)
+            return p, o
+
+        with pytest.raises(RuntimeError):
+            run(params, opt, 0)
+        # restart: discover latest checkpoint, resume
+        latest = mgr.latest()
+        assert latest == 2
+        restored = mgr.restore({"params": params, "opt": opt})
+        p, o = run(restored["params"], restored["opt"], latest + 1)
+        assert mgr.latest() == 5
+
+
+class TestHeartbeat:
+    def test_straggler_detection(self):
+        flagged = []
+        mon = HeartbeatMonitor(window=20, k_sigma=3.0,
+                               on_straggler=lambda r: flagged.append(r.step))
+        for s in range(20):
+            mon.beat(s, 0.10 + 0.001 * (s % 3))
+        assert not flagged
+        mon.beat(20, 0.50)  # 5x slower
+        assert flagged == [20]
+        assert mon.summary()["stragglers"] == 1
+
+    def test_no_false_positives_on_noise(self):
+        mon = HeartbeatMonitor(window=30, k_sigma=3.0)
+        rng = np.random.default_rng(0)
+        flags = [mon.beat(s, 0.1 + rng.normal(0, 0.002)) for s in range(100)]
+        assert sum(flags) <= 2

@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunking import ChunkMeta, chunk_kv
+
+
+class TestChunkMeta:
+    def test_partition_counts(self):
+        m = ChunkMeta(n_tokens=100, chunk_tokens=16)
+        assert m.n_chunks == 7
+        assert m.token_range(0) == (0, 16)
+        assert m.token_range(6) == (96, 100)
+        assert m.tokens_in(6) == 4
+
+    def test_chunk_of(self):
+        m = ChunkMeta(n_tokens=64, chunk_tokens=16)
+        assert m.chunk_of(0) == 0
+        assert m.chunk_of(15) == 0
+        assert m.chunk_of(16) == 1
+        assert m.chunk_of(63) == 3
+
+    def test_chunks_for_tokens(self):
+        m = ChunkMeta(n_tokens=64, chunk_tokens=16)
+        assert m.chunks_for_tokens([0, 1, 17, 63]) == [0, 1, 3]
+
+    @given(n=st.integers(1, 4096), c=st.sampled_from([4, 8, 16, 32]))
+    @settings(max_examples=50, deadline=None)
+    def test_partition_covers_exactly(self, n, c):
+        m = ChunkMeta(n_tokens=n, chunk_tokens=c)
+        total = sum(m.tokens_in(j) for j in range(m.n_chunks))
+        assert total == n
+        # ranges are disjoint and ordered
+        prev_end = 0
+        for j in range(m.n_chunks):
+            lo, hi = m.token_range(j)
+            assert lo == prev_end and hi > lo
+            prev_end = hi
+
+
+class TestChunkKV:
+    def test_roundtrip_with_padding(self):
+        rng = np.random.default_rng(0)
+        k = rng.normal(size=(37, 2, 8)).astype(np.float32)
+        v = rng.normal(size=(37, 2, 8)).astype(np.float32)
+        kc, vc = chunk_kv(k, v, 16)
+        assert kc.shape == (3, 16, 2, 8)
+        np.testing.assert_array_equal(kc.reshape(-1, 2, 8)[:37], k)
+        assert np.all(kc.reshape(-1, 2, 8)[37:] == 0)

@@ -1,0 +1,162 @@
+"""End-to-end Re-Prefill engine behaviour (real + simulated modes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import (
+    ASH2OEngine,
+    ASLRUEngine,
+    ContiguousKVEngine,
+    IMPRESSEngine,
+    SyntheticWorkload,
+    build_real_session,
+    build_sim_session,
+)
+from repro.core.backends import RealCompute, SimCompute
+from repro.models import transformer as T
+from repro.storage.timing import DeviceModel, RealExecutor, SimExecutor
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced_config("qwen2.5-14b", n_layers=4)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, 96)
+    suffix = rng.integers(0, cfg.vocab_size, 16)
+    full = np.asarray(
+        T.forward(params, {"tokens": jnp.asarray(np.concatenate([prefix, suffix]))[None]},
+                  cfg, block_q=16))
+    return cfg, params, prefix, suffix, full[0, -1]
+
+
+def _rel_err(a, b):
+    return np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+
+
+class TestRealMode:
+    def test_full_budget_matches_dense_forward(self, tiny_model):
+        cfg, params, prefix, suffix, ref = tiny_model
+        sess = build_real_session(cfg, params, prefix, in_memory=True)
+        eng = ContiguousKVEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                                 budget=1.0, period=2, subperiod=1,
+                                 device_cap=999, host_cap=999)
+        logits, trace = eng.reprefill(suffix)
+        assert _rel_err(ref, logits[0, -1]) < 3e-2  # fp16 store quantization
+        assert trace.read_amplification == pytest.approx(1.0)
+
+    def test_zero_read_amplification_at_any_budget(self, tiny_model):
+        cfg, params, prefix, suffix, _ = tiny_model
+        sess = build_real_session(cfg, params, prefix, in_memory=True)
+        for budget in (0.1, 0.25, 0.5):
+            eng = ContiguousKVEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                                     budget=budget, period=2, subperiod=1,
+                                     device_cap=0, host_cap=0)
+            _, trace = eng.reprefill(suffix)
+            assert trace.read_amplification == pytest.approx(1.0), budget
+
+    def test_as_lru_full_kv_matches_dense(self, tiny_model):
+        cfg, params, prefix, suffix, ref = tiny_model
+        sess = build_real_session(cfg, params, prefix, coarse_blocks=True,
+                                  block_tokens=32, in_memory=True)
+        eng = ASLRUEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                          device_cap=99, host_cap=99)
+        logits, trace = eng.reprefill(suffix)
+        assert _rel_err(ref, logits[0, -1]) < 3e-2
+        assert trace.read_amplification == pytest.approx(1.0)  # needs all blocks
+
+    def test_impress_block_read_amplification(self, tiny_model):
+        cfg, params, prefix, suffix, _ = tiny_model
+        sess = build_real_session(cfg, params, prefix, coarse_blocks=True,
+                                  block_tokens=32, in_memory=True)
+        eng = IMPRESSEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                            budget=0.1, device_cap=0, host_cap=0)
+        _, trace = eng.reprefill(suffix)
+        assert trace.read_amplification > 1.5  # token selection, block loads
+
+    def test_io_reduction_vs_impress(self, tiny_model):
+        """Table 2: ContiguousKV loads far fewer tokens from 'SSD'."""
+        cfg, params, prefix, suffix, _ = tiny_model
+        sess_c = build_real_session(cfg, params, prefix, in_memory=True)
+        sess_b = build_real_session(cfg, params, prefix, coarse_blocks=True,
+                                    block_tokens=32, in_memory=True)
+        e1 = ContiguousKVEngine(sess_c, RealCompute(cfg, params), RealExecutor(),
+                                budget=0.1, period=2, subperiod=1,
+                                device_cap=0, host_cap=0, inter_period=False)
+        e2 = IMPRESSEngine(sess_b, RealCompute(cfg, params), RealExecutor(),
+                           budget=0.1, device_cap=0, host_cap=0)
+        _, t1 = e1.reprefill(suffix)
+        _, t2 = e2.reprefill(suffix)
+        assert t1.tokens_loaded < t2.tokens_loaded
+
+    def test_cache_hits_reduce_ssd_traffic(self, tiny_model):
+        cfg, params, prefix, suffix, _ = tiny_model
+        sess = build_real_session(cfg, params, prefix, in_memory=True)
+        eng = ContiguousKVEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                                 budget=0.25, period=2, subperiod=1,
+                                 device_cap=64, host_cap=64)
+        _, t1 = eng.reprefill(suffix, request_id=0)
+        _, t2 = eng.reprefill(suffix, request_id=1)  # same suffix: warm cache
+        assert t2.ssd_bytes < t1.ssd_bytes
+        assert t2.hits_device > 0
+
+    def test_selected_indices_respect_budget(self, tiny_model):
+        cfg, params, prefix, suffix, _ = tiny_model
+        sess = build_real_session(cfg, params, prefix, in_memory=True)
+        eng = ContiguousKVEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                                 budget=0.25, period=2, subperiod=1,
+                                 device_cap=0, host_cap=0)
+        _, trace = eng.reprefill(suffix)
+        m = sess.meta.n_chunks
+        for sel in trace.selected_per_period:
+            assert len(sel) == int(np.ceil(0.25 * m))
+            assert np.all(sel < m)
+
+
+class TestSimMode:
+    @pytest.fixture(scope="class")
+    def sim_setup(self):
+        cfg = get_config("qwen2.5-7b")
+        wl = SyntheticWorkload(4096, cfg.n_layers, seed=1)
+        return cfg, wl
+
+    def _ttft(self, engine_cls, cfg, wl, coarse, **kw):
+        sess = (build_sim_session(cfg, 4096, coarse_blocks=True) if coarse
+                else build_sim_session(cfg, 4096))
+        ex = SimExecutor(DeviceModel())
+        eng = engine_cls(sess, SimCompute(cfg, wl), ex,
+                         device_cap=500, host_cap=2000, **kw)
+        _, trace = eng.reprefill(np.zeros(64, np.int64))
+        return trace
+
+    def test_contiguouskv_beats_impress(self, sim_setup):
+        cfg, wl = sim_setup
+        t_ckv = self._ttft(ContiguousKVEngine, cfg, wl, False, budget=0.05)
+        t_imp = self._ttft(IMPRESSEngine, cfg, wl, True, budget=0.05)
+        assert t_ckv.ttft < t_imp.ttft
+        # headline claim band: speedup > 2x at 5% budget
+        assert t_imp.ttft / t_ckv.ttft > 2.0
+
+    def test_contiguouskv_beats_as_lru(self, sim_setup):
+        cfg, wl = sim_setup
+        t_ckv = self._ttft(ContiguousKVEngine, cfg, wl, False, budget=0.05)
+        t_as = self._ttft(ASLRUEngine, cfg, wl, True)
+        assert t_ckv.ttft < t_as.ttft
+
+    def test_prefetch_ablation_helps(self, sim_setup):
+        """Fig. 12: w/o P must be slower."""
+        cfg, wl = sim_setup
+        t_on = self._ttft(ContiguousKVEngine, cfg, wl, False,
+                          budget=0.25, prefetch=True)
+        t_off = self._ttft(ContiguousKVEngine, cfg, wl, False,
+                           budget=0.25, prefetch=False)
+        assert t_on.ttft < t_off.ttft
+
+    def test_pipeline_never_loses_to_serial_io_sum(self, sim_setup):
+        """Overlap sanity: TTFT < sum of all stage times when pipelined."""
+        cfg, wl = sim_setup
+        tr = self._ttft(ContiguousKVEngine, cfg, wl, False, budget=0.25)
+        serial = sum(tr.stages.values())
+        assert tr.ttft >= serial * 0.3  # stages partly serialize

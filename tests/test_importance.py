@@ -1,0 +1,62 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.importance import (
+    chunk_scores_from_token_scores,
+    coverage_ratio,
+    select_topk_chunks,
+    select_topk_tokens,
+    token_attention_scores,
+)
+
+
+def test_token_scores_sum_to_queries_x_heads():
+    """Softmax rows sum to 1 -> total mass = n_queries * n_heads_q."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (5, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (32, 2, 16))
+    a = token_attention_scores(q, k)
+    assert a.shape == (32,)
+    np.testing.assert_allclose(float(a.sum()), 5 * 4, rtol=1e-5)
+
+
+def test_chunk_aggregation_matches_manual():
+    a = jnp.arange(32, dtype=jnp.float32)
+    cs = chunk_scores_from_token_scores(a, 8)
+    manual = np.arange(32).reshape(4, 8).sum(-1)
+    np.testing.assert_allclose(np.asarray(cs), manual)
+
+
+def test_chunk_aggregation_pads_tail():
+    a = jnp.ones((10,), jnp.float32)
+    cs = chunk_scores_from_token_scores(a, 8)
+    np.testing.assert_allclose(np.asarray(cs), [8.0, 2.0])
+
+
+@given(m=st.integers(1, 300), budget=st.floats(0.01, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_select_topk_budget_property(m, budget):
+    rng = np.random.default_rng(0)
+    scores = rng.normal(size=(m,))
+    sel = select_topk_chunks(scores, budget)
+    expected = min(m, max(1, int(np.ceil(budget * m))))
+    assert len(sel) == expected
+    assert np.all(np.diff(sel) > 0)  # sorted ascending, unique
+    # selected scores dominate unselected ones
+    if len(sel) < m:
+        unsel = np.setdiff1d(np.arange(m), sel)
+        assert scores[sel].min() >= scores[unsel].max() - 1e-12
+
+
+def test_select_tokens_h2o():
+    scores = np.array([0.1, 5.0, 0.2, 4.0, 0.3])
+    sel = select_topk_tokens(scores, 0.4)
+    np.testing.assert_array_equal(sel, [1, 3])
+
+
+def test_coverage_ratio():
+    assert coverage_ratio(np.array([1, 2, 3]), np.array([2, 3, 4])) == pytest.approx(2 / 3)
+    assert coverage_ratio(np.array([]), np.array([1])) == 1.0

@@ -1,0 +1,126 @@
+"""Per-arch smoke: reduced config, one forward + train step on CPU,
+shape + finite checks, and prefill/decode consistency vs dense forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, list_configs, reduced_config
+from repro.models import transformer as T
+from repro.models.frontends import make_frontend_embeds
+from repro.train.optimizer import adamw_init, adamw_update
+
+
+def _batch(cfg, key, b, s, training=True):
+    batch = {}
+    if cfg.frontend:
+        batch["embeds"] = make_frontend_embeds(key, cfg, b, s)
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if training:
+        batch["labels"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_and_train_step(arch):
+    cfg = reduced_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    batch = _batch(cfg, key, 2, 32)
+    logits = T.forward(params, batch, cfg, block_q=16)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    # one optimizer step moves the loss
+    loss0 = float(T.loss_fn(params, batch, cfg, block_q=16))
+    grads = jax.grad(lambda p: T.loss_fn(p, batch, cfg, block_q=16))(params)
+    opt = adamw_init(params)
+    params2, _ = adamw_update(grads, opt, params, lr=1e-2)
+    loss1 = float(T.loss_fn(params2, batch, cfg, block_q=16))
+    assert np.isfinite(loss0) and np.isfinite(loss1)
+    assert loss1 < loss0  # tiny model: one big step reduces loss
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_decode_consistency(arch):
+    cfg = reduced_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    b, s = 2, 24
+    if cfg.frontend:
+        embeds = make_frontend_embeds(key, cfg, b, s + 1)
+        full = T.forward(params, {"embeds": embeds}, cfg, block_q=8)
+        state = T.init_serve_state(cfg, b, s + 8)
+        _, state = T.prefill(params, {"embeds": embeds[:, :s]}, cfg, state, block_q=8)
+        dec, _ = T.decode_step(params, embeds[:, s : s + 1], cfg, state)
+    else:
+        toks = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+        full = T.forward(params, {"tokens": toks}, cfg, block_q=8)
+        state = T.init_serve_state(cfg, b, s + 8)
+        _, state = T.prefill(params, {"tokens": toks[:, :s]}, cfg, state, block_q=8)
+        dec, _ = T.decode_step(params, toks[:, s : s + 1], cfg, state)
+    ref = np.asarray(full[:, s])
+    got = np.asarray(dec[:, 0])
+    err = np.max(np.abs(ref - got)) / (np.max(np.abs(ref)) + 1e-9)
+    assert err < 2e-2, f"{arch}: decode/forward mismatch {err:.3e}"
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned hyperparameters (spot checks per arch)."""
+    c = get_config("musicgen-large")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == \
+        (48, 2048, 32, 32, 8192, 2048)
+    c = get_config("hymba-1.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.ssm_state) == (32, 1600, 25, 5, 5504, 32001, 16)
+    c = get_config("qwen3-1.7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.qk_norm) == (28, 2048, 16, 8, 6144, 151936, True)
+    c = get_config("qwen2.5-14b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.qkv_bias) == (48, 5120, 40, 8, 13824, 152064, True)
+    c = get_config("gemma3-4b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.local_global_ratio) == (34, 2560, 8, 4, 10240, 262144, 5)
+    c = get_config("yi-34b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (60, 7168, 56, 8, 20480, 64000)
+    c = get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.d_model, c.vocab_size, c.ssm_state, c.d_ff) == \
+        (64, 4096, 65024, 16, 0)
+    c = get_config("internvl2-76b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.frontend) == (80, 8192, 64, 8, 28672, 128256, "vision")
+    c = get_config("granite-moe-3b-a800m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab_size,
+            c.n_experts, c.top_k, c.moe_d_ff) == (32, 1536, 24, 8, 49155, 40, 8, 512)
+    c = get_config("mixtral-8x22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab_size,
+            c.n_experts, c.top_k, c.moe_d_ff, c.sliding_window) == \
+        (56, 6144, 48, 8, 32768, 8, 2, 16384, 4096)
+
+
+def test_gemma3_local_global_pattern():
+    cfg = get_config("gemma3-4b")
+    w = cfg.window_sizes()
+    # 5 local then 1 global, repeating
+    assert list(w[:6]) == [1024] * 5 + [0]
+    assert w.shape == (34,)
+
+
+def test_param_counts_in_expected_band():
+    expect = {
+        "qwen2.5-14b": (13e9, 16e9),
+        "yi-34b": (33e9, 36e9),
+        "mixtral-8x22b": (135e9, 145e9),
+        "falcon-mamba-7b": (6e9, 8e9),
+        "internvl2-76b": (65e9, 80e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+
+def test_moe_active_params_smaller():
+    c = get_config("mixtral-8x22b")
+    assert c.active_param_count() < c.param_count() / 2

@@ -1,0 +1,28 @@
+import pytest
+
+from repro.core.periods import PeriodSchedule
+
+
+def test_schedule_covers_all_layers():
+    s = PeriodSchedule(28, period=8, subperiod=4)
+    layers = [l for p in s for l in p.layers]
+    assert layers == list(range(28))
+    assert len(s) == 4
+    assert s.periods[-1].layers == [24, 25, 26, 27]
+
+
+def test_period_of_and_heads():
+    s = PeriodSchedule(16, period=4, subperiod=2)
+    assert s.period_of(5).index == 1
+    assert s.is_head(0) and s.is_head(4) and not s.is_head(5)
+
+
+def test_gate_layers_subperiod():
+    s = PeriodSchedule(16, period=8, subperiod=3)
+    p = s.periods[0]
+    assert s.gate_layers(p) == [0, 1, 2]
+
+
+def test_invalid_subperiod_rejected():
+    with pytest.raises(AssertionError):
+        PeriodSchedule(8, period=4, subperiod=5)

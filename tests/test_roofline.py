@@ -1,0 +1,95 @@
+"""HLO roofline analyzer: trip-count scaling, dot FLOPs, collective bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.roofline import HloAnalyzer, Hardware, roofline
+
+
+def _mesh22():
+    n = len(jax.devices())
+    if n < 4:
+        pytest.skip("needs >=4 devices (xla_force_host_platform_device_count)")
+    return jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_scan_trip_count_scales_flops():
+    W = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+
+    def f_scan(x, w):
+        y, _ = jax.lax.scan(lambda c, _: (jnp.tanh(c @ w), None), x, None, length=10)
+        return y
+
+    def f_once(x, w):
+        return jnp.tanh(x @ w)
+
+    t_scan = jax.jit(f_scan).lower(x, W).compile().as_text()
+    t_once = jax.jit(f_once).lower(x, W).compile().as_text()
+    m_scan = HloAnalyzer(t_scan).entry_metrics()
+    m_once = HloAnalyzer(t_once).entry_metrics()
+    one = 2 * 64 * 128 * 128
+    assert m_once.flops == pytest.approx(one)
+    assert m_scan.flops == pytest.approx(10 * one, rel=0.01)
+
+
+def test_collective_bytes_all_gather():
+    mesh = _mesh22()
+    xs = jax.ShapeDtypeStruct((64, 128), jnp.float32,
+                              sharding=NamedSharding(mesh, P(None, None)))
+    ws = jax.ShapeDtypeStruct((128, 64), jnp.float32,
+                              sharding=NamedSharding(mesh, P(None, "model")))
+
+    def g(x, w):
+        y = x @ w
+        return jax.lax.with_sharding_constraint(
+            y, NamedSharding(mesh, P(None, None)))
+
+    with mesh:
+        text = jax.jit(g).lower(xs, ws).compile().as_text()
+    m = HloAnalyzer(text).entry_metrics()
+    assert m.total_coll_bytes > 0
+    assert "all-gather" in m.coll_bytes
+
+
+def test_dot_flops_per_device_are_sharded():
+    mesh = _mesh22()
+    xs = jax.ShapeDtypeStruct((64, 128), jnp.float32,
+                              sharding=NamedSharding(mesh, P("data", None)))
+    ws = jax.ShapeDtypeStruct((128, 64), jnp.float32,
+                              sharding=NamedSharding(mesh, P(None, "model")))
+    with mesh:
+        text = jax.jit(lambda x, w: x @ w).lower(xs, ws).compile().as_text()
+    m = HloAnalyzer(text).entry_metrics()
+    # per-device: (64/2) x 128 x (64/2) x 2
+    assert m.flops == pytest.approx(2 * 32 * 128 * 32, rel=0.05)
+
+
+def test_roofline_report_terms_and_dominance():
+    from repro.launch.roofline import Metrics
+
+    hw = Hardware(peak_flops=100.0, hbm_bw=10.0, ici_bw=1.0)
+    m = Metrics(flops=500.0, hbm_bytes=40.0, hbm_bytes_min=20.0,
+                coll_bytes={"all-reduce": 3.0}, coll_by_group={16: 3.0})
+    rep = roofline(m, arch="a", shape="s", mesh="single",
+                   model_flops_per_device=400.0, hw=hw)
+    assert rep.t_compute == pytest.approx(5.0)
+    assert rep.t_memory == pytest.approx(2.0)  # fused bound
+    assert rep.t_memory_upper == pytest.approx(4.0)
+    assert rep.t_collective == pytest.approx(3.0)
+    assert rep.dominant == "compute"
+    assert rep.useful_ratio == pytest.approx(0.8)
+
+
+def test_cross_pod_groups_use_dcn_bandwidth():
+    from repro.launch.roofline import Metrics
+
+    hw = Hardware(ici_bw=100.0, dcn_bw=10.0)
+    m = Metrics(coll_by_group={2: 10.0, 16: 10.0},
+                coll_bytes={"all-reduce": 20.0})
+    rep = roofline(m, arch="a", shape="s", mesh="multi",
+                   model_flops_per_device=1.0, hw=hw, cross_pod_groups=(2,))
+    assert rep.t_collective == pytest.approx(10.0 / 10.0 + 10.0 / 100.0)

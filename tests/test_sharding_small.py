@@ -1,0 +1,108 @@
+"""Distribution lowering on a small host mesh (4 virtual devices): the same
+code path the 512-device production dry-run exercises."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import jax.numpy as jnp
+import numpy as np
+sys_path = {src!r}
+import sys
+sys.path.insert(0, sys_path)
+from repro.configs import reduced_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import param_shardings, serve_state_shardings
+from repro.launch.specs import param_specs_tree
+from repro.launch.steps import make_train_step, make_decode_step, make_sparse_decode_step
+from repro.launch.act_sharding import activation_sharding
+from repro.models import transformer as T
+from repro.train.optimizer import adamw_init
+
+cfg = reduced_config({arch!r}, n_layers=2)
+mesh = make_host_mesh(2, 2)
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+sh = param_shardings(cfg, mesh, fsdp=True)
+params = jax.device_put(params, sh)
+
+{body}
+print("OK")
+"""
+
+TRAIN_BODY = """
+opt = jax.device_put(adamw_init(params), {
+    "m": sh, "v": sh,
+    "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())})
+from jax.sharding import NamedSharding, PartitionSpec as P
+bsh = NamedSharding(mesh, P("data", None))
+batch = {
+    "tokens": jax.device_put(np.random.randint(0, cfg.vocab_size, (4, 32)), bsh),
+    "labels": jax.device_put(np.random.randint(0, cfg.vocab_size, (4, 32)), bsh),
+}
+if cfg.frontend:
+    esh = NamedSharding(mesh, P("data", None, None))
+    batch = {
+        "embeds": jax.device_put(
+            np.random.normal(size=(4, 32, cfg.d_model)).astype(np.float32), esh),
+        "labels": batch["labels"],
+    }
+step = make_train_step(cfg, grad_accum=2, remat=True, lr=1e-3)
+with mesh, activation_sharding(mesh):
+    p2, o2, m2 = jax.jit(step)(params, opt, batch)
+assert np.isfinite(float(m2["loss"]))
+"""
+
+DECODE_BODY = """
+state = T.init_serve_state(cfg, 4, 64)
+ssh = serve_state_shardings(cfg, mesh, 4)
+state = {k: (jax.device_put(v, ssh[k]) if k in ssh else v) for k, v in state.items()}
+state["length"] = jnp.asarray(16, jnp.int32)
+tok = np.random.randint(0, cfg.vocab_size, (4, 1)).astype(np.int32)
+if cfg.frontend:
+    tok = np.random.normal(size=(4, 1, cfg.d_model)).astype(np.float32)
+step = make_decode_step(cfg)
+with mesh, activation_sharding(mesh):
+    logits, state2 = jax.jit(step)(params, jnp.asarray(tok), state)
+assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+"""
+
+SPARSE_BODY = """
+state = T.init_serve_state(cfg, 4, 64)
+state["length"] = jnp.asarray(32, jnp.int32)
+tok = np.random.randint(0, cfg.vocab_size, (4, 1)).astype(np.int32)
+step = make_sparse_decode_step(cfg, chunk_tokens=8, budget=0.5)
+with mesh, activation_sharding(mesh):
+    logits, state2 = jax.jit(step)(params, jnp.asarray(tok), state)
+assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+"""
+
+
+def _run(arch, body):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = SCRIPT.format(src=os.path.abspath(src), arch=arch, body=body)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mixtral-8x22b", "falcon-mamba-7b"])
+def test_train_step_on_mesh(arch):
+    _run(arch, TRAIN_BODY)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "hymba-1.5b"])
+def test_decode_step_on_mesh(arch):
+    _run(arch, DECODE_BODY)
+
+
+@pytest.mark.slow
+def test_sparse_decode_on_mesh():
+    _run("qwen3-1.7b", SPARSE_BODY)

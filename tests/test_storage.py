@@ -1,0 +1,106 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.storage.layout import (
+    ContiguousChunkLayout,
+    CoarseBlockLayout,
+    KVGeometry,
+    read_amplification,
+)
+from repro.storage.ssd import ChunkStore
+from repro.storage.timing import DeviceModel, SimExecutor
+
+
+GEOM = KVGeometry(n_kv_heads=2, d_head=16, bytes_per_el=2)
+
+
+class TestLayouts:
+    def test_chunk_layout_geometry(self):
+        lay = ContiguousChunkLayout(100, 4, GEOM, 16)
+        assert lay.n_units == 7
+        assert lay.unit_bytes == 16 * 2 * 2 * 16 * 2
+        assert lay.total_bytes == 4 * 7 * lay.unit_bytes
+
+    def test_coalesce_adjacent_units(self):
+        lay = ContiguousChunkLayout(256, 2, GEOM, 16)
+        runs = lay.coalesce(0, [0, 1, 2, 5, 7, 8])
+        assert [r.units for r in runs] == [(0, 1, 2), (5,), (7, 8)]
+        assert runs[0].nbytes == 3 * lay.unit_bytes
+        # offsets land in layer 0's region
+        assert all(r.offset < lay.layer_bytes for r in runs)
+
+    def test_block_layout_token_mapping(self):
+        lay = CoarseBlockLayout(256, 2, GEOM, 64)
+        assert lay.units_for_tokens([0, 63]) == [0]
+        assert lay.units_for_tokens([0, 64, 200]) == [0, 1, 3]
+        assert lay.units_for_chunks([3], 16) == [0]  # chunk 3 = tokens 48..63
+        assert lay.units_for_chunks([4], 16) == [1]
+
+    def test_read_amplification_math(self):
+        # 11 tokens scattered across 9 blocks of 64 (the paper's example)
+        token_bytes = GEOM.token_bytes
+        loaded = 9 * 64 * token_bytes
+        needed = 11 * token_bytes
+        assert read_amplification(loaded, needed) == pytest.approx(52.4, rel=0.01)
+
+    @given(units=st.lists(st.integers(0, 63), min_size=1, max_size=40))
+    @settings(max_examples=50, deadline=None)
+    def test_coalesce_covers_exactly_once(self, units):
+        lay = ContiguousChunkLayout(64 * 16, 1, GEOM, 16)
+        runs = lay.coalesce(0, units)
+        covered = [u for r in runs for u in r.units]
+        assert sorted(covered) == sorted(set(units))
+        assert sum(r.nbytes for r in runs) == len(set(units)) * lay.unit_bytes
+
+
+class TestChunkStore:
+    def test_roundtrip_file_backed(self, tmp_path):
+        lay = ContiguousChunkLayout(80, 3, GEOM, 16)
+        store = ChunkStore(lay, path=str(tmp_path / "kv.bin"))
+        rng = np.random.default_rng(0)
+        k = rng.normal(size=(80, 2, 16)).astype(np.float16)
+        v = rng.normal(size=(80, 2, 16)).astype(np.float16)
+        store.write_layer(1, k, v)
+        got = store.read_units(1, [0, 2, 4])
+        assert set(got) == {0, 2, 4}
+        np.testing.assert_array_equal(got[2][:, 0], k[32:48])
+        np.testing.assert_array_equal(got[2][:, 1], v[32:48])
+        # padding on the tail unit
+        tail = store.read_units(1, [4])[4]
+        assert np.all(np.asarray(tail[0:], np.float32)[80 - 64 :] == 0)
+        store.close()
+
+    def test_stats_and_coalescing(self):
+        lay = ContiguousChunkLayout(128, 1, GEOM, 16)
+        store = ChunkStore(lay, in_memory=True)
+        store.write_layer(0, np.zeros((128, 2, 16), np.float16),
+                          np.zeros((128, 2, 16), np.float16))
+        store.read_units(0, [0, 1, 5])
+        assert store.stats.requests == 2  # [0,1] coalesced + [5]
+        assert store.stats.bytes_read == 3 * lay.unit_bytes
+        nbytes, nreq = store.run_plan(0, [2, 3, 4])
+        assert (nbytes, nreq) == (3 * lay.unit_bytes, 1)
+
+
+class TestSimExecutor:
+    def test_io_compute_overlap(self):
+        ex = SimExecutor(DeviceModel(ssd_bandwidth=1e9, ssd_latency=0.001,
+                                     pcie_bandwidth=1e10))
+        h = ex.submit_io(None, nbytes=10_000_000, n_requests=1, channel="ssd")
+        # compute overlaps the 11ms IO
+        ex.compute(None, flops=197e12 * 0.45 * 0.005, tag="work")  # 5ms
+        ex.wait(h)
+        assert ex.now() == pytest.approx(0.011, rel=0.01)
+
+    def test_fifo_channel_serialization(self):
+        ex = SimExecutor(DeviceModel(ssd_bandwidth=1e9, ssd_latency=0.0))
+        h1 = ex.submit_io(None, nbytes=1_000_000, n_requests=1, channel="ssd")
+        h2 = ex.submit_io(None, nbytes=1_000_000, n_requests=1, channel="ssd")
+        assert h2.ready_at == pytest.approx(h1.ready_at + 0.001, rel=0.01)
+
+    def test_iops_bound_scattered_reads(self):
+        m = DeviceModel(ssd_bandwidth=7.45e9, ssd_iops=600e3, ssd_latency=0.0)
+        t_seq = m.ssd_read_time(4096 * 1000, n_requests=1)
+        t_rand = m.ssd_read_time(4096 * 1000, n_requests=1000)
+        assert t_rand > t_seq  # scattered requests cost IOPS

@@ -1,0 +1,88 @@
+"""End-to-end behaviour of the full ContiguousKV system against the paper's
+headline claims (scaled to this container — see DESIGN.md §5)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import (
+    ASH2OEngine,
+    ASLRUEngine,
+    ContiguousKVEngine,
+    IMPRESSEngine,
+    SyntheticWorkload,
+    build_real_session,
+    build_sim_session,
+)
+from repro.core.backends import RealCompute, SimCompute
+from repro.core.importance import coverage_ratio
+from repro.models import transformer as T
+from repro.storage.timing import DeviceModel, RealExecutor, SimExecutor
+
+
+def test_headline_speedup_ordering():
+    """Fig. 10 ordering at 5% budget: ckv < impress < as_h2o, ckv < as_lru."""
+    cfg = get_config("qwen2.5-7b")
+    wl = SyntheticWorkload(6000, cfg.n_layers, seed=0)
+    ttfts = {}
+    for name, cls, coarse, kw in [
+        ("ckv", ContiguousKVEngine, False, dict(budget=0.05)),
+        ("impress", IMPRESSEngine, True, dict(budget=0.05)),
+        ("as_h2o", ASH2OEngine, True, dict(budget=0.05)),
+        ("as_lru", ASLRUEngine, True, {}),
+    ]:
+        sess = build_sim_session(cfg, 6000, coarse_blocks=coarse)
+        eng = cls(sess, SimCompute(cfg, wl), SimExecutor(DeviceModel()),
+                  device_cap=500, host_cap=2000, **kw)
+        _, tr = eng.reprefill(np.zeros(64, np.int64))
+        ttfts[name] = tr.ttft
+    assert ttfts["ckv"] < ttfts["impress"] < ttfts["as_h2o"]
+    assert ttfts["ckv"] < ttfts["as_lru"]
+    # paper: 3.85x vs IMPRESS — assert we land in a sane band (>2x)
+    assert ttfts["impress"] / ttfts["ckv"] > 2.0
+
+
+def test_period_index_similarity_band():
+    """Fig. 7: consecutive-period coverage in a plausible band on a real
+    (tiny, briefly trained-free) model."""
+    cfg = reduced_config("qwen2.5-14b", n_layers=8)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, 128)
+    suffix = rng.integers(0, cfg.vocab_size, 16)
+    sess = build_real_session(cfg, params, prefix, in_memory=True)
+    eng = ContiguousKVEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                             budget=0.25, period=2, subperiod=1,
+                             device_cap=0, host_cap=0)
+    _, tr = eng.reprefill(suffix)
+    sels = tr.selected_per_period
+    assert len(sels) == 4
+    covs = [coverage_ratio(sels[i], sels[i + 1]) for i in range(len(sels) - 1)]
+    assert all(0.0 <= c <= 1.0 for c in covs)
+
+
+def test_quality_degrades_gracefully_with_budget():
+    """Fig. 9 proxy: higher budget => logits closer to the full-KV run."""
+    cfg = reduced_config("qwen2.5-14b", n_layers=4)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab_size, 128)
+    suffix = rng.integers(0, cfg.vocab_size, 16)
+    import jax.numpy as jnp
+
+    full = np.asarray(T.forward(
+        params, {"tokens": jnp.asarray(np.concatenate([prefix, suffix]))[None]},
+        cfg, block_q=16))[0, -1]
+    sess = build_real_session(cfg, params, prefix, in_memory=True)
+
+    def fidelity(budget):
+        eng = ContiguousKVEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                                 budget=budget, period=2, subperiod=1,
+                                 device_cap=0, host_cap=0)
+        logits, _ = eng.reprefill(suffix)
+        a, b = full.ravel(), np.asarray(logits[0, -1]).ravel()
+        return float(np.dot(a, b) / (np.linalg.norm(a) * np.linalg.norm(b)))
+
+    f_low, f_high, f_full = fidelity(0.1), fidelity(0.5), fidelity(1.0)
+    assert f_full > 0.999
+    assert f_high >= f_low - 0.02  # monotone-ish improvement
