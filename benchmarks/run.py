@@ -22,6 +22,7 @@ from benchmarks import (  # noqa: E402
     bench_ablation,
     bench_io_reduction,
     bench_sensitivity,
+    bench_throughput,
 )
 
 MODULES = {
@@ -34,6 +35,7 @@ MODULES = {
     "fig12": bench_ablation,
     "table2": bench_io_reduction,
     "fig14_16": bench_sensitivity,
+    "serving": bench_throughput,
 }
 
 

@@ -20,6 +20,13 @@ from repro.core.session import (
     build_real_session,
     build_sim_session,
 )
+from repro.core.stepplan import (
+    ComputeOp,
+    RequestClock,
+    StepPlan,
+    WaitOp,
+    drive_serial,
+)
 
 __all__ = [
     "AttentionGuidedCache",
@@ -37,4 +44,9 @@ __all__ = [
     "SyntheticWorkload",
     "build_real_session",
     "build_sim_session",
+    "ComputeOp",
+    "RequestClock",
+    "StepPlan",
+    "WaitOp",
+    "drive_serial",
 ]

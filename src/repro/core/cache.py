@@ -15,14 +15,27 @@ import itertools
 from collections import OrderedDict
 from typing import Dict, Hashable, Iterable, Optional, Set, Tuple
 
-Key = Tuple[int, int]
+Key = Tuple[int, int]  # (layer, unit) — or (tenant, layer, unit) multi-tenant
 
 DEVICE = "device"
 HOST = "host"
 
 
+def tenant_of(key) -> int:
+    """Owner of a cache key: multi-tenant keys are (tenant, layer, unit);
+    legacy 2-tuples belong to the implicit tenant 0."""
+    if isinstance(key, tuple) and len(key) == 3:
+        return key[0]
+    return 0
+
+
 class CachePolicy:
-    """Interface shared by all policies."""
+    """Interface shared by all policies.
+
+    One policy instance may be shared by several tenants (multi-tenant
+    serving): keys are then tenant-namespaced 3-tuples and per-tenant
+    hit/miss/occupancy accounting is kept alongside the global counters.
+    """
 
     def __init__(self, device_capacity: int, host_capacity: int):
         self.device_capacity = device_capacity
@@ -30,18 +43,43 @@ class CachePolicy:
         self.tiers: Dict[str, Set[Key]] = {DEVICE: set(), HOST: set()}
         self.hits = {DEVICE: 0, HOST: 0}
         self.misses = 0
+        # per-tenant counters: tenant -> {"device": hits, "host": hits, "miss": n}
+        self.tenant_stats: Dict[int, Dict[str, int]] = {}
+
+    def _tstat(self, key) -> Dict[str, int]:
+        t = tenant_of(key)
+        st = self.tenant_stats.get(t)
+        if st is None:
+            st = self.tenant_stats[t] = {DEVICE: 0, HOST: 0, "miss": 0}
+        return st
 
     def lookup(self, key: Key) -> Optional[str]:
         if key in self.tiers[DEVICE]:
             self.hits[DEVICE] += 1
+            self._tstat(key)[DEVICE] += 1
             self.on_access(key)
             return DEVICE
         if key in self.tiers[HOST]:
             self.hits[HOST] += 1
+            self._tstat(key)[HOST] += 1
             self.on_access(key)
             return HOST
         self.misses += 1
+        self._tstat(key)["miss"] += 1
         return None
+
+    def tenant_usage(self) -> Dict[int, Dict[str, int]]:
+        """Resident units per tenant per tier (scan; capacities are small)."""
+        usage: Dict[int, Dict[str, int]] = {}
+        for tier in (DEVICE, HOST):
+            for key in self.tiers[tier]:
+                u = usage.setdefault(tenant_of(key), {DEVICE: 0, HOST: 0})
+                u[tier] += 1
+        return usage
+
+    def resident_units(self, tenant: int, tier: Optional[str] = None) -> int:
+        tiers = (DEVICE, HOST) if tier is None else (tier,)
+        return sum(1 for t in tiers for k in self.tiers[t] if tenant_of(k) == tenant)
 
     def contains(self, key: Key) -> Optional[str]:
         if key in self.tiers[DEVICE]:

@@ -13,6 +13,12 @@ Engines:
   IMPRESSEngine      — partial-key probing, token selection, block loads,
       score-based cache, next-layer probe prefetch (the overlap the paper
       grants existing systems).
+
+Since the serving refactor every engine is a *step-plan factory*: ``plan()``
+returns a resumable generator of ComputeOp/WaitOp steps (repro.core.stepplan)
+that a scheduler can interleave with other requests' plans. ``reprefill()``
+remains as the single-request wrapper and reproduces the historical
+run-to-completion behaviour exactly.
 """
 from __future__ import annotations
 
@@ -39,9 +45,22 @@ from repro.core.importance import (
 )
 from repro.core.periods import PeriodSchedule
 from repro.core.sparse_attention import bucket_size
+from repro.core.stepplan import (
+    ComputeOp,
+    RequestClock,
+    StepPlan,
+    WaitOp,
+    drive_serial,
+)
 from repro.storage.layout import ContiguousChunkLayout, CoarseBlockLayout, KVGeometry
 from repro.storage.ssd import ChunkStore
-from repro.storage.timing import BaseExecutor, IOHandle, RealExecutor, SimExecutor
+from repro.storage.timing import (
+    BaseExecutor,
+    ChannelSim,
+    IOHandle,
+    RealExecutor,
+    SimExecutor,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -54,6 +73,7 @@ class PrefixSession:
     meta: ChunkMeta
     store: object  # ChunkStore or PlanStore
     probe: Optional[np.ndarray] = None  # (L, n, n_kv, d) fp16 prefix keys
+    tenant: int = 0  # namespace for shared-cache keys (0 = single-tenant)
 
 
 @dataclasses.dataclass
@@ -122,12 +142,62 @@ class _EngineBase:
         self.cache = cache
         self.budget = budget
         self.cfg = session.cfg
-        self.sim = isinstance(executor, SimExecutor)
-        self._data: Dict[Tuple[int, int], np.ndarray] = {}
+        self.sim = isinstance(executor, ChannelSim)
+        self.tenant = session.tenant
+        self._data: Dict[Tuple, np.ndarray] = {}
+
+    # -- plan entry points ----------------------------------------------------
+    def plan(self, suffix_tokens, request_id: int = 0,
+             arrival: float = 0.0) -> StepPlan:
+        """Build a resumable step plan for one request (does not run it)."""
+        clock = RequestClock(arrival)
+        trace = ReprefillTrace(system=self.name)
+        gen = self._steps(np.asarray(suffix_tokens), request_id, clock, trace)
+        return StepPlan(request_id=request_id, gen=gen, clock=clock, trace=trace)
+
+    def reprefill(self, suffix_tokens, request_id: int = 0):
+        """Single-request compatibility wrapper around the step plan."""
+        p = self.plan(suffix_tokens, request_id)
+        logits = drive_serial(self.ex, p)
+        return logits, p.trace
+
+    def _steps(self, suffix_tokens, request_id, clock, trace):
+        raise NotImplementedError
+
+    # -- keys ------------------------------------------------------------------
+    def _key(self, layer: int, unit: int) -> Tuple:
+        """Cache/data key; tenant-namespaced when sharing a cache."""
+        if self.tenant:
+            return (self.tenant, layer, int(unit))
+        return (layer, int(unit))
+
+    def _bound(self, request_id: int, fn):
+        """Pin a shared backend to this request while `fn` runs (concurrent
+        plans interleave over one backend; the sim workload is keyed by the
+        current request id)."""
+        be = self.backend
+        if not hasattr(be, "new_request"):
+            return fn
+
+        def rebind():
+            be.new_request(request_id)
+            return fn()
+
+        return rebind
 
     # -- I/O helpers ---------------------------------------------------------
+    def _io(self, clock: RequestClock, fn, *, nbytes: int, n_requests: int,
+            channel: str, after: Optional[IOHandle] = None) -> IOHandle:
+        """Submit a transfer no earlier than the request's own clock."""
+        if self.sim:
+            return self.ex.submit_io_at(fn, nbytes=nbytes, n_requests=n_requests,
+                                        channel=channel, at=clock.t, after=after)
+        return self.ex.submit_io(fn, nbytes=nbytes, n_requests=n_requests,
+                                 channel=channel)
+
     def _submit_units(self, layer: int, units: List[int], trace: ReprefillTrace,
-                      handles: Dict, *, speculative: bool = False,
+                      handles: Dict, clock: RequestClock, *,
+                      speculative: bool = False,
                       needed_bytes_per_unit: Optional[Dict[int, int]] = None) -> None:
         """Load `units` of `layer` honoring cache tiers; records handles.
 
@@ -138,13 +208,13 @@ class _EngineBase:
         store = self.session.store
         missing, host_hits = [], []
         for u in units:
-            key = (layer, int(u))
+            key = self._key(layer, u)
             if key in handles:
                 continue
             tier = self.cache.lookup(key)
             if tier == DEVICE:
                 trace.hits_device += 1
-                handles[key] = IOHandle(ready_at=self.ex.now())
+                handles[key] = IOHandle(ready_at=clock.t)
                 if key in self._data:
                     handles[key].result = self._data[key]
             elif tier == HOST:
@@ -156,25 +226,18 @@ class _EngineBase:
         unit_bytes = store.layout.unit_bytes
         if host_hits:
             nbytes = len(host_hits) * unit_bytes
-            h = self.ex.submit_io(
-                self._mk_fetch(layer, host_hits, from_host=True),
-                nbytes=nbytes, n_requests=1, channel="pcie",
-            )
+            h = self._io(clock, self._mk_fetch(layer, host_hits, from_host=True),
+                         nbytes=nbytes, n_requests=1, channel="pcie")
             trace.pcie_bytes += nbytes
             for u in host_hits:
-                handles[(layer, int(u))] = h
+                handles[self._key(layer, u)] = h
         if missing:
             nbytes, nreq = store.run_plan(layer, missing)
-            h = self.ex.submit_io(
-                self._mk_fetch(layer, missing, from_host=False),
-                nbytes=nbytes, n_requests=nreq, channel="ssd",
-            )
+            h = self._io(clock, self._mk_fetch(layer, missing, from_host=False),
+                         nbytes=nbytes, n_requests=nreq, channel="ssd")
             if self.sim:  # chain the PCIe leg after the SSD leg
-                h2 = self.ex.submit_io(None, nbytes=nbytes, n_requests=1,
-                                       channel="pcie")
-                h2.ready_at = max(h2.ready_at, h.ready_at)
-                h2.result = h.result
-                h = h2
+                h = self._io(clock, None, nbytes=nbytes, n_requests=1,
+                             channel="pcie", after=h)
             trace.ssd_bytes += nbytes
             if speculative:
                 trace.ssd_bytes_spec += nbytes
@@ -190,7 +253,8 @@ class _EngineBase:
             trace.pcie_bytes += nbytes
             trace.tokens_loaded += len(missing) * store.layout.unit_tokens
             for u in missing:
-                handles[(layer, int(u))] = h
+                handles[self._key(layer, u)] = h
+        return None
 
     def _mk_fetch(self, layer: int, units: List[int], from_host: bool):
         if self.sim:
@@ -199,27 +263,27 @@ class _EngineBase:
 
         def fetch():
             if from_host:
-                return {int(u): self._data[(layer, int(u))] for u in units}
+                return {int(u): self._unit_data(layer, int(u)) for u in units}
             got = store.read_units(layer, units)
             for u, arr in got.items():
-                self._data[(layer, int(u))] = arr
+                self._data[self._key(layer, u)] = arr
             return got
 
         return fetch
 
-    def _wait_keys(self, layer: int, units, handles, trace: ReprefillTrace, tag: str):
-        t0 = self.ex.now()
+    def _wait_keys(self, layer: int, units, handles, trace: ReprefillTrace,
+                   tag: str, clock: RequestClock):
+        """Generator: one WaitOp per outstanding unit handle."""
+        t0 = clock.t
         for u in units:
-            h = handles.get((layer, int(u)))
+            h = handles.get(self._key(layer, u))
             if h is not None:
-                self.ex.wait(h)
-                if h.future is not None:
-                    h.done_result()
-        trace.add_stage(tag, self.ex.now() - t0)
+                yield WaitOp(h, tag=tag)
+        trace.add_stage(tag, clock.t - t0)
 
     def _insert_cache(self, layer: int, units):
         for u in units:
-            self.cache.insert((layer, int(u)), DEVICE)
+            self.cache.insert(self._key(layer, u), DEVICE)
 
     def _sweep_data(self):
         live = self.cache.tiers[DEVICE] | self.cache.tiers[HOST]
@@ -227,9 +291,18 @@ class _EngineBase:
             if key not in live:
                 del self._data[key]
 
+    def _unit_data(self, layer: int, unit: int) -> np.ndarray:
+        """KV payload of one unit; re-reads from the store if a concurrent
+        plan's sweep evicted it between our wait and our gather."""
+        rec = self._data.get(self._key(layer, unit))
+        if rec is None:
+            rec = self.session.store.read_units(layer, [int(unit)])[int(unit)]
+            self._data[self._key(layer, unit)] = rec
+        return rec
+
     # -- probe ----------------------------------------------------------------
-    def _submit_probe(self, layer: int, trace: ReprefillTrace, ratio: float = 1.0):
-        n = self.session.meta.n_chunks * self.session.meta.chunk_tokens
+    def _submit_probe(self, layer: int, trace: ReprefillTrace,
+                      clock: RequestClock, ratio: float = 1.0):
         nbytes = CM.probe_bytes(self.cfg, self.session.prefix_len, ratio)
         probe = self.session.probe
 
@@ -242,12 +315,10 @@ class _EngineBase:
                 k = k[..., : max(1, int(d * ratio))]
             return k
 
-        h = self.ex.submit_io(fetch, nbytes=nbytes, n_requests=1, channel="ssd")
+        h = self._io(clock, fetch, nbytes=nbytes, n_requests=1, channel="ssd")
         if self.sim:
-            h2 = self.ex.submit_io(None, nbytes=nbytes, n_requests=1, channel="pcie")
-            h2.ready_at = max(h2.ready_at, h.ready_at)
-            h2.result = h.result
-            h = h2
+            h = self._io(clock, None, nbytes=nbytes, n_requests=1,
+                         channel="pcie", after=h)
         trace.ssd_bytes_probe += nbytes
         trace.pcie_bytes += nbytes
         return h
@@ -277,7 +348,7 @@ class _EngineBase:
         k_sel = np.zeros((nb, chunk_tokens, g.n_kv_heads, g.d_head), np.float16)
         v_sel = np.zeros_like(k_sel)
         for i, u in enumerate(units):
-            rec = self._data[(layer, int(u))]  # (c, 2, n_kv, d)
+            rec = self._unit_data(layer, int(u))  # (c, 2, n_kv, d)
             k_sel[i] = rec[:, 0]
             v_sel[i] = rec[:, 1]
         return k_sel, v_sel, valid
@@ -299,38 +370,35 @@ class ContiguousKVEngine(_EngineBase):
         self.inter_period = inter_period and prefetch
         self.chunk_tokens = session.meta.chunk_tokens
 
-    def reprefill(self, suffix_tokens: np.ndarray, request_id: int = 0):
-        trace = ReprefillTrace(system=self.name)
-        ex, be, cfg = self.ex, self.backend, self.cfg
+    def _steps(self, suffix_tokens, request_id, clock, trace):
+        be, cfg = self.backend, self.cfg
         meta = self.session.meta
         if hasattr(be, "new_request"):
             be.new_request(request_id)
         s = len(suffix_tokens)
-        t_start = ex.now()
+        t_start = clock.t
 
-        h = ex.compute(lambda: be.embed(suffix_tokens),
-                       flops=2.0 * s * cfg.d_model, tag="compute")
+        h = yield ComputeOp(lambda: be.embed(suffix_tokens),
+                            flops=2.0 * s * cfg.d_model, tag="compute")
         handles: Dict = {}
         probe_handles: Dict[int, IOHandle] = {}
-        probe_handles[0] = self._submit_probe(0, trace)
-        sel_sets: Dict[int, np.ndarray] = {}
+        probe_handles[0] = self._submit_probe(0, trace, clock)
 
         for period in self.schedule:
             head = period.head
-            x, q, k_suf, v_suf = ex.compute(
+            x, q, k_suf, v_suf = yield ComputeOp(
                 lambda hh=h, l=head: be.part_a(l, hh, self.session.prefix_len),
                 flops=self._cost_part_a(s), tag="compute")
 
             if period.index not in probe_handles:  # lazy (no inter-period)
-                probe_handles[period.index] = self._submit_probe(head, trace)
-            t0 = ex.now()
-            ph = probe_handles[period.index]
-            ex.wait(ph)
-            probe_data = ph.done_result() if ph.future is not None else ph.result
-            trace.add_stage("probe_io", ex.now() - t0)
+                probe_handles[period.index] = self._submit_probe(head, trace, clock)
+            t0 = clock.t
+            probe_data = yield WaitOp(probe_handles[period.index], tag="probe_io")
+            trace.add_stage("probe_io", clock.t - t0)
 
-            tok_scores = ex.compute(
-                lambda: be.token_scores(q, probe_data, head),
+            tok_scores = yield ComputeOp(
+                self._bound(request_id,
+                            lambda qq=q, pd=probe_data, l=head: be.token_scores(qq, pd, l)),
                 flops=self._cost_identify(s), tag="identify")
             cs = np.asarray(
                 np.add.reduceat(
@@ -339,54 +407,55 @@ class ContiguousKVEngine(_EngineBase):
                 )
             )
             selected = select_topk_chunks(cs, self.budget)
-            sel_sets[period.index] = selected
             trace.selected_per_period.append(selected)
             for l in period.layers:
                 trace.selected_per_layer[l] = selected
 
             if self.prefetch:
                 for l in period.layers:
-                    self._submit_units(l, list(selected), trace, handles)
+                    self._submit_units(l, list(selected), trace, handles, clock)
                 if self.inter_period and period.index + 1 < len(self.schedule):
                     nxt = self.schedule.periods[period.index + 1]
-                    probe_handles[nxt.index] = self._submit_probe(nxt.head, trace)
+                    probe_handles[nxt.index] = self._submit_probe(nxt.head, trace, clock)
                     for l in nxt.layers:  # speculative warm-up with current set
-                        self._submit_units(l, list(selected), trace, handles,
+                        self._submit_units(l, list(selected), trace, handles, clock,
                                            speculative=True)
                 for l in self.schedule.gate_layers(period):
-                    self._wait_keys(l, selected, handles, trace, "kv_io")
+                    yield from self._wait_keys(l, selected, handles, trace,
+                                               "kv_io", clock)
             elif period.index + 1 < len(self.schedule):
                 nxt = self.schedule.periods[period.index + 1]
                 # probe must still be loaded for the next period (on demand)
-                probe_handles[nxt.index] = self._submit_probe(nxt.head, trace)
+                probe_handles[nxt.index] = self._submit_probe(nxt.head, trace, clock)
 
             n_attended = len(selected) * meta.chunk_tokens + s
             for l in period.layers:
                 if l != head:
-                    x, q, k_suf, v_suf = ex.compute(
+                    x, q, k_suf, v_suf = yield ComputeOp(
                         lambda hh=h, ll=l: be.part_a(ll, hh, self.session.prefix_len),
                         flops=self._cost_part_a(s), tag="compute")
                 if not self.prefetch:
-                    self._submit_units(l, list(selected), trace, handles)
-                self._wait_keys(l, selected, handles, trace, "kv_io")
+                    self._submit_units(l, list(selected), trace, handles, clock)
+                yield from self._wait_keys(l, selected, handles, trace, "kv_io", clock)
                 k_sel, v_sel, valid = self._gather_chunks(l, selected, meta.chunk_tokens)
                 fl, hb = self._cost_part_b(s, n_attended)
-                h, mass = ex.compute(
-                    lambda hh=h, ll=l, a=x, b=q, c1=k_suf, c2=v_suf,
-                           k1=k_sel, v1=v_sel, vd=valid: be.part_b(
-                        ll, hh, b, c1, c2, k1, v1, vd, meta.chunk_tokens),
+                h, mass = yield ComputeOp(
+                    self._bound(request_id,
+                                lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
+                                       k1=k_sel, v1=v_sel, vd=valid: be.part_b(
+                                    ll, hh, b, c1, c2, k1, v1, vd, meta.chunk_tokens)),
                     flops=fl, hbm_bytes=hb, tag="compute")
                 # attention-guided cache updates (Eq. 1/2)
                 if isinstance(self.cache, AttentionGuidedCache) and mass is not None:
                     for i, u in enumerate(selected):
-                        self.cache.update_importance((l, int(u)), float(mass[i]))
+                        self.cache.update_importance(self._key(l, u), float(mass[i]))
                 self._insert_cache(l, selected)
 
-        logits = ex.compute(lambda: be.logits(h),
-                            flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
-        trace.ttft = ex.now() - t_start
+        logits = yield ComputeOp(lambda hh=h: be.logits(hh),
+                                 flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
+        trace.ttft = clock.t - t_start
         self._sweep_data()
-        return logits, trace
+        return logits
 
 
 # ---------------------------------------------------------------------------
@@ -400,38 +469,37 @@ class _BlockBaselineEngine(_EngineBase):
     probe_ratio = 1.0  # fraction of key dims loaded for probing
     probe_prefetch = False  # IMPRESS: prefetch next layer's probe keys
 
-    def reprefill(self, suffix_tokens: np.ndarray, request_id: int = 0):
-        trace = ReprefillTrace(system=self.name)
-        ex, be, cfg = self.ex, self.backend, self.cfg
-        meta = self.session.meta
+    def _steps(self, suffix_tokens, request_id, clock, trace):
+        be, cfg = self.backend, self.cfg
         if hasattr(be, "new_request"):
             be.new_request(request_id)
         s = len(suffix_tokens)
-        t_start = ex.now()
-        h = ex.compute(lambda: be.embed(suffix_tokens),
-                       flops=2.0 * s * cfg.d_model, tag="compute")
+        t_start = clock.t
+        h = yield ComputeOp(lambda: be.embed(suffix_tokens),
+                            flops=2.0 * s * cfg.d_model, tag="compute")
         handles: Dict = {}
         layout = self.session.store.layout
         probe_handles: Dict[int, IOHandle] = {}
 
         for l in range(cfg.n_layers):
-            x, q, k_suf, v_suf = ex.compute(
+            x, q, k_suf, v_suf = yield ComputeOp(
                 lambda hh=h, ll=l: be.part_a(ll, hh, self.session.prefix_len),
                 flops=self._cost_part_a(s), tag="compute")
 
             if self.select_tokens:
                 if l not in probe_handles:  # lazy (AS+H2O: no overlap at all)
-                    probe_handles[l] = self._submit_probe(l, trace, self.probe_ratio)
-                t0 = ex.now()
-                ph = probe_handles[l]
-                ex.wait(ph)
-                probe_data = ph.done_result() if ph.future is not None else ph.result
-                trace.add_stage("probe_io", ex.now() - t0)
+                    probe_handles[l] = self._submit_probe(l, trace, clock,
+                                                          self.probe_ratio)
+                t0 = clock.t
+                probe_data = yield WaitOp(probe_handles[l], tag="probe_io")
+                trace.add_stage("probe_io", clock.t - t0)
                 if self.probe_prefetch and l + 1 < cfg.n_layers:
                     # IMPRESS overlaps the next layer's probe load with compute
-                    probe_handles[l + 1] = self._submit_probe(l + 1, trace, self.probe_ratio)
-                tok_scores = ex.compute(
-                    lambda: be.token_scores(q, probe_data, l),
+                    probe_handles[l + 1] = self._submit_probe(l + 1, trace, clock,
+                                                              self.probe_ratio)
+                tok_scores = yield ComputeOp(
+                    self._bound(request_id,
+                                lambda qq=q, pd=probe_data, ll=l: be.token_scores(qq, pd, ll)),
                     flops=self._cost_identify(s) * self.probe_ratio, tag="identify")
                 tokens = select_topk_tokens(np.asarray(tok_scores), self.budget)
                 blocks = layout.units_for_tokens(tokens)
@@ -450,15 +518,16 @@ class _BlockBaselineEngine(_EngineBase):
                 needed = None  # whole blocks are needed: amplification 1.0
                 n_attended = self.session.prefix_len + s
 
-            self._submit_units(l, blocks, trace, handles,
+            self._submit_units(l, blocks, trace, handles, clock,
                                needed_bytes_per_unit=needed)
-            self._wait_keys(l, blocks, handles, trace, "kv_io")
+            yield from self._wait_keys(l, blocks, handles, trace, "kv_io", clock)
             k_sel, v_sel, valid = self._gather_tokens(l, tokens, blocks)
             fl, hb = self._cost_part_b(s, n_attended)
-            h, mass = ex.compute(
-                lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
-                       k1=k_sel, v1=v_sel, vd=valid: be.part_b(
-                    ll, hh, b, c1, c2, k1, v1, vd, 1),
+            h, mass = yield ComputeOp(
+                self._bound(request_id,
+                            lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
+                                   k1=k_sel, v1=v_sel, vd=valid: be.part_b(
+                                ll, hh, b, c1, c2, k1, v1, vd, 1)),
                 flops=fl, hbm_bytes=hb, tag="compute")
             if isinstance(self.cache, ImpressScoreCache):
                 # static importance: fraction of selected tokens in each block
@@ -466,14 +535,15 @@ class _BlockBaselineEngine(_EngineBase):
                     lo = blk * layout.unit_tokens
                     hi = lo + layout.unit_tokens
                     cnt = int(np.sum((tokens >= lo) & (tokens < hi)))
-                    self.cache.set_static_score((l, int(blk)), cnt / layout.unit_tokens)
+                    self.cache.set_static_score(self._key(l, blk),
+                                                cnt / layout.unit_tokens)
             self._insert_cache(l, blocks)
 
-        logits = ex.compute(lambda: be.logits(h),
-                            flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
-        trace.ttft = ex.now() - t_start
+        logits = yield ComputeOp(lambda hh=h: be.logits(hh),
+                                 flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
+        trace.ttft = clock.t - t_start
         self._sweep_data()
-        return logits, trace
+        return logits
 
     def _gather_tokens(self, layer: int, tokens: np.ndarray, blocks):
         """Token-granular gather out of loaded blocks (the re-assembly the
@@ -489,7 +559,7 @@ class _BlockBaselineEngine(_EngineBase):
         v_sel = np.zeros_like(k_sel)
         for i, t in enumerate(tokens):
             blk, off = divmod(int(t), layout.unit_tokens)
-            rec = self._data[(layer, blk)]
+            rec = self._unit_data(layer, blk)
             k_sel[i, 0] = rec[off, 0]
             v_sel[i, 0] = rec[off, 1]
         return k_sel, v_sel, valid
@@ -499,7 +569,8 @@ class ASLRUEngine(_BlockBaselineEngine):
     name = "as_lru"
     select_tokens = False
 
-    def __init__(self, session, backend, executor, *, device_cap=0, host_cap=0, budget=1.0):
+    def __init__(self, session, backend, executor, *, device_cap=0, host_cap=0):
+        # Full-prefix streaming: the budget is 1.0 by construction.
         super().__init__(session, backend, executor,
                          LRUCache(device_cap, host_cap), budget=1.0)
 
@@ -515,46 +586,46 @@ class ASLRUEngine(_BlockBaselineEngine):
         k_sel = np.zeros((nb, layout.unit_tokens, g.n_kv_heads, g.d_head), np.float16)
         v_sel = np.zeros_like(k_sel)
         for i, u in enumerate(blocks):
-            rec = self._data[(layer, int(u))]
+            rec = self._unit_data(layer, int(u))
             k_sel[i] = rec[:, 0]
             v_sel[i] = rec[:, 1]
         return k_sel, v_sel, valid
 
-    def reprefill(self, suffix_tokens, request_id: int = 0):
+    def _steps(self, suffix_tokens, request_id, clock, trace):
         # full blocks are chunk-shaped: reuse block path with chunk_tokens=block
-        trace = ReprefillTrace(system=self.name)
-        ex, be, cfg = self.ex, self.backend, self.cfg
+        be, cfg = self.backend, self.cfg
         if hasattr(be, "new_request"):
             be.new_request(request_id)
         s = len(suffix_tokens)
-        t_start = ex.now()
-        h = ex.compute(lambda: be.embed(suffix_tokens),
-                       flops=2.0 * s * cfg.d_model, tag="compute")
+        t_start = clock.t
+        h = yield ComputeOp(lambda: be.embed(suffix_tokens),
+                            flops=2.0 * s * cfg.d_model, tag="compute")
         handles: Dict = {}
         layout = self.session.store.layout
         blocks = list(range(layout.n_units))
         # AS prefetches all layers' KV up-front (full cache streaming)
         for l in range(cfg.n_layers):
-            self._submit_units(l, blocks, trace, handles)
+            self._submit_units(l, blocks, trace, handles, clock)
         n_attended = self.session.prefix_len + s
         for l in range(cfg.n_layers):
-            x, q, k_suf, v_suf = ex.compute(
+            x, q, k_suf, v_suf = yield ComputeOp(
                 lambda hh=h, ll=l: be.part_a(ll, hh, self.session.prefix_len),
                 flops=self._cost_part_a(s), tag="compute")
-            self._wait_keys(l, blocks, handles, trace, "kv_io")
+            yield from self._wait_keys(l, blocks, handles, trace, "kv_io", clock)
             k_sel, v_sel, valid = self._gather_tokens(l, None, blocks)
             fl, hb = self._cost_part_b(s, n_attended)
-            h, _ = ex.compute(
-                lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
-                       k1=k_sel, v1=v_sel, vd=valid: be.part_b(
-                    ll, hh, b, c1, c2, k1, v1, vd, layout.unit_tokens),
+            h, _ = yield ComputeOp(
+                self._bound(request_id,
+                            lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
+                                   k1=k_sel, v1=v_sel, vd=valid: be.part_b(
+                                ll, hh, b, c1, c2, k1, v1, vd, layout.unit_tokens)),
                 flops=fl, hbm_bytes=hb, tag="compute")
             self._insert_cache(l, blocks)
-        logits = ex.compute(lambda: be.logits(h),
-                            flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
-        trace.ttft = ex.now() - t_start
+        logits = yield ComputeOp(lambda hh=h: be.logits(hh),
+                                 flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
+        trace.ttft = clock.t - t_start
         self._sweep_data()
-        return logits, trace
+        return logits
 
 
 class ASH2OEngine(_BlockBaselineEngine):

@@ -57,7 +57,10 @@ def build_real_session(
     v_all = np.asarray(kvs[1][:, 0], dtype=np.float16)
     for l in range(cfg.n_layers):
         store.write_layer(l, k_all[l], v_all[l])
-    meta = ChunkMeta(n_tokens=n, chunk_tokens=chunk_tokens if not coarse_blocks else chunk_tokens)
+    # the pruning/storage unit: chunk granularity, or the coarse block size
+    # when the session is laid out in blocks
+    meta = ChunkMeta(n_tokens=n,
+                     chunk_tokens=block_tokens if coarse_blocks else chunk_tokens)
     return PrefixSession(cfg=cfg, prefix_len=n, meta=meta, store=store, probe=k_all)
 
 
@@ -74,7 +77,8 @@ def build_sim_session(
         layout = CoarseBlockLayout(prefix_len, cfg.n_layers, geom, block_tokens)
     else:
         layout = ContiguousChunkLayout(prefix_len, cfg.n_layers, geom, chunk_tokens)
-    meta = ChunkMeta(n_tokens=prefix_len, chunk_tokens=chunk_tokens)
+    meta = ChunkMeta(n_tokens=prefix_len,
+                     chunk_tokens=block_tokens if coarse_blocks else chunk_tokens)
     return PrefixSession(cfg=cfg, prefix_len=prefix_len, meta=meta,
                          store=PlanStore(layout), probe=None)
 

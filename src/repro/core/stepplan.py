@@ -1,0 +1,113 @@
+"""Schedulable step plans: the engine/executor contract for serving.
+
+A Re-Prefill engine no longer runs to completion inside ``reprefill``;
+instead :meth:`_EngineBase.plan` returns a :class:`StepPlan` whose generator
+yields one :class:`ComputeOp` or :class:`WaitOp` per blocking point.  Whoever
+drives the generator decides *when* each op runs:
+
+  drive_serial          — one plan at a time against the executor's own clock
+                          (exactly the pre-refactor single-request behaviour;
+                          all existing benchmarks run through this wrapper);
+  serving.Scheduler     — many plans interleaved over shared FIFO channels
+                          (ssd / pcie / compute), so one request's I/O stall
+                          is another request's compute window.
+
+Non-blocking work (I/O submissions, numpy scoring between ops) executes
+inline inside the generator and is charged zero virtual time, mirroring how
+the engine's control loop was modelled before the refactor.
+
+Each plan carries a :class:`RequestClock` — the request-local notion of
+"now".  Drivers update ``clock.t`` after every op; engine code reads it for
+stage accounting and passes it as the earliest-start time of channel
+occupancy.  This replaces the executor-global ``t_now`` control point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Generator, Optional
+
+from repro.storage.timing import IOHandle
+
+
+class RequestClock:
+    """Request-local virtual time (sim) / last-observed wall time (real)."""
+
+    __slots__ = ("t",)
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __repr__(self):
+        return f"RequestClock(t={self.t:.6f})"
+
+
+@dataclasses.dataclass
+class ComputeOp:
+    """Occupy the accelerator; the generator receives ``fn()``'s value."""
+
+    fn: Optional[Callable]
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    tag: str = "compute"
+
+
+@dataclasses.dataclass
+class WaitOp:
+    """Suspend until ``handle`` completes; receives the handle's result."""
+
+    handle: IOHandle
+    tag: str = ""
+
+
+Op = object  # ComputeOp | WaitOp
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """A resumable per-request execution: generator + clock + live trace."""
+
+    request_id: int
+    gen: Generator
+    clock: RequestClock
+    trace: object  # ReprefillTrace (avoid circular import)
+
+    def resume_time(self, op) -> float:
+        """Earliest virtual time the pending op can run."""
+        if isinstance(op, WaitOp):
+            return max(self.clock.t, op.handle.ready_at)
+        return self.clock.t
+
+
+def resolve_handle(handle: IOHandle):
+    """Materialize a completed handle's payload (real mode joins the future)."""
+    if handle.future is not None:
+        return handle.done_result()
+    return handle.result
+
+
+def drive_serial(executor, plan: StepPlan):
+    """Run one plan to completion on a single-control-point executor.
+
+    This is the compatibility wrapper: with a ``SimExecutor`` the resulting
+    timeline is bit-identical to the pre-stepplan monolithic ``reprefill``,
+    because every op is issued at the executor's own ``now()`` in program
+    order.  Returns the generator's return value (the logits).
+    """
+    clock = plan.clock
+    clock.t = executor.now()
+    gen = plan.gen
+    send = None
+    try:
+        while True:
+            op = gen.send(send)
+            if isinstance(op, ComputeOp):
+                send = executor.compute(op.fn, flops=op.flops,
+                                        hbm_bytes=op.hbm_bytes, tag=op.tag)
+            elif isinstance(op, WaitOp):
+                executor.wait(op.handle)
+                send = resolve_handle(op.handle)
+            else:
+                raise TypeError(f"plan yielded {op!r}, expected ComputeOp/WaitOp")
+            clock.t = executor.now()
+    except StopIteration as stop:
+        return stop.value

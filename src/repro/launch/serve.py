@@ -1,49 +1,44 @@
-"""Serving driver: ingest a shared prefix once, then serve a stream of
-requests through the ContiguousKV Re-Prefill engine (or a baseline).
+"""Serving driver: concurrent request streams through the step-plan scheduler.
+
+Real mode (default) ingests a shared prefix into a tiny real model once, then
+serves a stream of requests concurrently — plans cooperatively multiplex over
+the thread-pool I/O, so one request's chunk reads overlap another's compute:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
-      --system contiguous_kv --budget 0.25 --requests 8
+      --system contiguous_kv --budget 0.25 --requests 8 --concurrency 4
+
+Sim mode runs paper-scale multi-tenant serving on the calibrated
+discrete-event channels with Poisson/burst arrivals and prints the
+latency/goodput digest:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode sim --model qwen2.5-7b \
+      --tenants 4 --requests 32 --concurrency 4 --policy cache_aware
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
 import numpy as np
 
-from repro.configs import reduced_config
-from repro.core import (
-    ASH2OEngine,
-    ASLRUEngine,
-    ContiguousKVEngine,
-    IMPRESSEngine,
-    build_real_session,
+from repro.serving import (
+    POLICIES,
+    Request,
+    Scheduler,
+    make_arrivals,
+    summarize,
 )
-from repro.core.backends import RealCompute
-from repro.data.synthetic import make_task
-from repro.models import transformer as T
-from repro.storage.timing import RealExecutor
-
-ENGINES = {
-    "contiguous_kv": ContiguousKVEngine,
-    "impress": IMPRESSEngine,
-    "as_h2o_lfu": ASH2OEngine,
-    "as_lru": ASLRUEngine,
-}
+from repro.serving.tenancy import ENGINE_CLASSES, build_sim_fleet
 
 
-def main():
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", default="qwen2.5-14b")
-    p.add_argument("--system", default="contiguous_kv", choices=list(ENGINES))
-    p.add_argument("--dataset", default="rte")
-    p.add_argument("--budget", type=float, default=0.25)
-    p.add_argument("--chunk-tokens", type=int, default=16)
-    p.add_argument("--period", type=int, default=4)
-    p.add_argument("--subperiod", type=int, default=2)
-    p.add_argument("--requests", type=int, default=8)
-    p.add_argument("--n-layers", type=int, default=4)
-    args = p.parse_args()
+def _real_main(args):
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.core import build_real_session
+    from repro.core.backends import RealCompute
+    from repro.data.synthetic import make_task
+    from repro.models import transformer as T
+    from repro.storage.timing import RealExecutor
 
     cfg = reduced_config(args.arch, n_layers=args.n_layers)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -60,18 +55,95 @@ def main():
         kw.update(budget=args.budget, period=args.period, subperiod=args.subperiod)
     elif args.system != "as_lru":
         kw.update(budget=args.budget)
-    eng = ENGINES[args.system](sess, RealCompute(cfg, params), ex, **kw)
+    eng = ENGINE_CLASSES[args.system](sess, RealCompute(cfg, params), ex, **kw)
+
+    requests = [Request(request_id=rid, suffix=suffix)
+                for rid, (suffix, _) in enumerate(task.queries)]
+    sched = Scheduler(eng, policy=args.policy, max_concurrency=args.concurrency)
+    completed = sched.run(requests)
 
     correct = 0
-    for rid, (suffix, gold) in enumerate(task.queries):
-        logits, tr = eng.reprefill(suffix, request_id=rid)
-        pred = int(np.argmax(logits[0, -1]))
-        gold_tok = task.label_token(gold)
-        correct += int(pred == gold_tok)
-        print(f"req {rid:2d}: ttft={tr.ttft*1e3:7.1f}ms ssd={tr.ssd_bytes/1e3:8.1f}KB "
+    for c in completed:
+        rid = c.request.request_id
+        _, gold = task.queries[rid]
+        pred = int(np.argmax(c.result[0, -1]))
+        correct += int(pred == task.label_token(gold))
+        tr = c.trace
+        print(f"req {rid:2d}: ttft={c.ttft*1e3:7.1f}ms ssd={tr.ssd_bytes/1e3:8.1f}KB "
               f"amp={tr.read_amplification:5.2f} hits(d/h)={tr.hits_device}/{tr.hits_host}")
+    s = summarize(completed)
+    print(f"concurrency={args.concurrency} policy={args.policy} "
+          f"p50={s['p50_ttft']*1e3:.1f}ms p95={s['p95_ttft']*1e3:.1f}ms "
+          f"goodput={s['goodput_rps']:.2f} req/s")
     print(f"label-token accuracy (untrained model => chance-level): "
           f"{correct}/{len(task.queries)}")
+
+
+def _sim_main(args):
+    fleet = build_sim_fleet(args.system, args.model, n_tenants=args.tenants,
+                            prefix_len=args.prefix_len, budget=args.budget,
+                            period=args.period, subperiod=args.subperiod,
+                            device_cap=args.device_cap, host_cap=args.host_cap)
+    arrivals = make_arrivals(args.arrival, args.rate, args.requests, seed=0)
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(request_id=i, suffix=rng.integers(0, 1000, 64),
+                arrival=float(arrivals[i]),
+                tenant=1 + i % args.tenants)
+        for i in range(args.requests)
+    ]
+    sched = Scheduler(fleet.engines, policy=args.policy,
+                      max_concurrency=args.concurrency)
+    completed = sched.run(requests)
+    for c in completed:
+        print(f"req {c.request.request_id:3d} tenant={c.request.tenant} "
+              f"arr={c.request.arrival*1e3:8.1f}ms queue={c.queue_delay*1e3:7.1f}ms "
+              f"ttft={c.ttft*1e3:8.1f}ms hits(d/h)={c.trace.hits_device}/{c.trace.hits_host}")
+    s = summarize(completed)
+    print(f"\n{args.system} tenants={args.tenants} load={args.rate:.1f} req/s "
+          f"concurrency={args.concurrency} policy={args.policy}")
+    print(f"p50={s['p50_ttft']*1e3:.1f}ms p95={s['p95_ttft']*1e3:.1f}ms "
+          f"goodput={s['goodput_rps']:.2f} req/s "
+          f"mean_queue={s['mean_queue_delay']*1e3:.1f}ms")
+    usage = fleet.cache.tenant_usage()
+    for tenant in sorted(usage):
+        u = usage[tenant]
+        print(f"tenant {tenant}: cache device={u['device']} host={u['host']} units")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--mode", default="real", choices=("real", "sim"))
+    p.add_argument("--system", default="contiguous_kv", choices=list(ENGINE_CLASSES))
+    p.add_argument("--budget", type=float, default=0.25)
+    p.add_argument("--chunk-tokens", type=int, default=16)
+    p.add_argument("--period", type=int, default=4)
+    p.add_argument("--subperiod", type=int, default=2)
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--concurrency", type=int, default=4)
+    p.add_argument("--policy", default="fcfs", choices=list(POLICIES))
+    # real mode
+    p.add_argument("--arch", default="qwen2.5-14b")
+    p.add_argument("--dataset", default="rte")
+    p.add_argument("--n-layers", type=int, default=4)
+    # sim mode
+    p.add_argument("--model", default="qwen2.5-7b")
+    p.add_argument("--tenants", type=int, default=1)
+    p.add_argument("--prefix-len", type=int, default=4096)
+    p.add_argument("--rate", type=float, default=16.0, help="offered load, req/s")
+    p.add_argument("--arrival", default="poisson",
+                   choices=("poisson", "burst", "uniform"))
+    p.add_argument("--device-cap", type=int, default=256)
+    p.add_argument("--host-cap", type=int, default=1024)
+    args = p.parse_args()
+    if args.tenants < 1:
+        p.error("--tenants must be >= 1")
+    if args.concurrency < 1:
+        p.error("--concurrency must be >= 1")
+    if args.mode == "sim":
+        _sim_main(args)
+    else:
+        _real_main(args)
 
 
 if __name__ == "__main__":

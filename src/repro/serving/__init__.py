@@ -1,0 +1,43 @@
+"""Multi-tenant serving: schedulable step plans over shared channels.
+
+Layers on top of repro.core (engines as step-plan factories) and
+repro.storage.timing (ChannelSim shared-FIFO discrete-event core):
+
+  arrivals  — Poisson / burst / uniform arrival processes;
+  scheduler — Scheduler + admission policies (FCFS, cache-aware affinity),
+              Request/CompletedRequest, run summaries;
+  tenancy   — multi-tenant fleets: N prefixes, one shared cache/executor.
+"""
+from repro.serving.arrivals import (
+    burst_arrivals,
+    make_arrivals,
+    poisson_arrivals,
+    uniform_arrivals,
+)
+from repro.serving.scheduler import (
+    POLICIES,
+    CacheAffinityPolicy,
+    CompletedRequest,
+    FCFSPolicy,
+    Request,
+    Scheduler,
+    summarize,
+)
+from repro.serving.tenancy import ENGINE_CLASSES, TenantFleet, build_sim_fleet
+
+__all__ = [
+    "burst_arrivals",
+    "make_arrivals",
+    "poisson_arrivals",
+    "uniform_arrivals",
+    "POLICIES",
+    "CacheAffinityPolicy",
+    "CompletedRequest",
+    "FCFSPolicy",
+    "Request",
+    "Scheduler",
+    "summarize",
+    "ENGINE_CLASSES",
+    "TenantFleet",
+    "build_sim_fleet",
+]

@@ -1,0 +1,100 @@
+"""Multi-tenant session construction: N prefixes, one shared cache.
+
+Each tenant owns a distinct shared prefix (its PrefixSession / engine /
+workload) but all tenants compete for the same two-tier
+AttentionGuidedCache and the same ssd/pcie/compute channels — the
+"offloading throughput is set by how concurrent requests share the
+channels" regime of arXiv:2601.19910. Cache keys are namespaced
+(tenant, layer, unit), so `cache.tenant_usage()` reports per-tenant
+occupancy and the cache-aware admission policy can steer warm tenants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.backends import SimCompute
+from repro.core.cache import AttentionGuidedCache
+from repro.core.engine import (
+    ASH2OEngine,
+    ASLRUEngine,
+    ContiguousKVEngine,
+    IMPRESSEngine,
+)
+from repro.core.session import SyntheticWorkload, build_sim_session
+from repro.storage.timing import ChannelSim, DeviceModel
+
+ENGINE_CLASSES = {
+    "contiguous_kv": ContiguousKVEngine,
+    "impress": IMPRESSEngine,
+    "as_h2o_lfu": ASH2OEngine,
+    "as_lru": ASLRUEngine,
+}
+
+
+@dataclasses.dataclass
+class TenantFleet:
+    """One serving deployment: per-tenant engines over shared resources."""
+
+    engines: Dict[int, object]
+    executor: ChannelSim
+    cache: object
+    workloads: Dict[int, SyntheticWorkload]
+
+
+def build_sim_fleet(
+    system: str,
+    model_name: str,
+    *,
+    n_tenants: int = 1,
+    prefix_len: int = 4096,
+    budget: float = 0.25,
+    chunk_tokens: int = 16,
+    block_tokens: int = 64,
+    period: int = 8,
+    subperiod: int = 4,
+    device_cap: int = 256,
+    host_cap: int = 1024,
+    device_model: Optional[DeviceModel] = None,
+    seed: int = 0,
+) -> TenantFleet:
+    """Build `n_tenants` engines of one system sharing executor + cache.
+
+    Tenant ids are 1..n_tenants (0 is the single-tenant legacy namespace).
+    Non-ContiguousKV systems get their own policy class but still share one
+    cache *instance* across tenants, so occupancy competition is real.
+    """
+    cfg = get_config(model_name)
+    executor = ChannelSim(device_model or DeviceModel())
+    cls = ENGINE_CLASSES[system]
+    shared_cache = None
+    engines: Dict[int, object] = {}
+    workloads: Dict[int, SyntheticWorkload] = {}
+    for tenant in range(1, n_tenants + 1):
+        coarse = system != "contiguous_kv"
+        sess = build_sim_session(cfg, prefix_len, chunk_tokens=chunk_tokens,
+                                 coarse_blocks=coarse, block_tokens=block_tokens)
+        sess = dataclasses.replace(sess, tenant=tenant)
+        wl = SyntheticWorkload(prefix_len, cfg.n_layers, seed=seed + 1000 * tenant)
+        be = SimCompute(cfg, wl)
+        if system == "contiguous_kv":
+            if shared_cache is None:
+                shared_cache = AttentionGuidedCache(device_cap, host_cap)
+            eng = cls(sess, be, executor, cache=shared_cache, budget=budget,
+                      period=period, subperiod=subperiod)
+        else:
+            kw = dict(device_cap=device_cap, host_cap=host_cap)
+            if system != "as_lru":
+                kw["budget"] = budget
+            eng = cls(sess, be, executor, **kw)
+            if shared_cache is None:
+                shared_cache = eng.cache
+            else:
+                eng.cache = shared_cache  # all tenants contend for one policy
+        engines[tenant] = eng
+        workloads[tenant] = wl
+    return TenantFleet(engines=engines, executor=executor, cache=shared_cache,
+                       workloads=workloads)

@@ -115,24 +115,28 @@ class RealExecutor(BaseExecutor):
         self.pool.shutdown(wait=True)
 
 
-class SimExecutor(BaseExecutor):
-    """Deterministic discrete-event timeline.
+class ChannelSim(BaseExecutor):
+    """Multi-request discrete-event core: shared FIFO channels, no global clock.
 
-    Channels: "ssd" (SSD->host), "pcie" (host->device). Each is a serialized
-    FIFO resource; the accelerator is a third. ``t_now`` tracks the engine's
-    control point (= accelerator-side orchestration).
+    Channels: "ssd" (SSD->host), "pcie" (host->device), "compute" (the
+    accelerator). Each is a serialized FIFO resource shared by every in-flight
+    request. There is deliberately *no* ``t_now`` here — each request carries
+    its own clock (``repro.core.stepplan.RequestClock``) and passes it as the
+    earliest-start time (``at=``) of every occupancy, so concurrent requests
+    queue behind each other on the channels instead of behind a single
+    control point. A scheduler that always advances the request with the
+    smallest clock gets near-global FIFO ordering.
+
+    The legacy single-request API (``submit_io``/``wait``/``compute`` driven
+    by one implicit clock) lives in the :class:`SimExecutor` subclass below.
     """
 
     def __init__(self, model: DeviceModel):
         self.model = model
-        self.t_now = 0.0
         self.free_at: Dict[str, float] = {"ssd": 0.0, "pcie": 0.0, "compute": 0.0}
         self.busy: Dict[str, float] = {"ssd": 0.0, "pcie": 0.0, "compute": 0.0}
         self.stage_times: Dict[str, float] = {}
         self.events: List[tuple] = []  # (start, end, resource, tag)
-
-    def now(self) -> float:
-        return self.t_now
 
     def _occupy(self, resource: str, duration: float, tag: str,
                 earliest: float) -> float:
@@ -143,23 +147,62 @@ class SimExecutor(BaseExecutor):
         self.events.append((start, end, resource, tag))
         return end
 
-    def submit_io(self, fn, *, nbytes, n_requests, channel) -> IOHandle:
+    def io_duration(self, nbytes: int, n_requests: int, channel: str) -> float:
         if channel == "ssd":
-            dur = self.model.ssd_read_time(nbytes, n_requests)
-        else:
-            dur = self.model.pcie_time(nbytes)
-        end = self._occupy(channel, dur, f"io:{channel}", self.t_now)
+            return self.model.ssd_read_time(nbytes, n_requests)
+        return self.model.pcie_time(nbytes)
+
+    def submit_io_at(self, fn, *, nbytes, n_requests, channel, at: float,
+                     after: Optional[IOHandle] = None) -> IOHandle:
+        """Enqueue a transfer on `channel` no earlier than `at`.
+
+        `after` chains legs of a staged transfer (SSD leg -> PCIe leg): the
+        handle completes no earlier than the upstream handle, and carries the
+        upstream payload through.
+        """
+        dur = self.io_duration(nbytes, n_requests, channel)
+        end = self._occupy(channel, dur, f"io:{channel}", at)
         h = IOHandle(ready_at=end)
+        if after is not None:
+            h.ready_at = max(h.ready_at, after.ready_at)
+            h.result = after.result
         if fn is not None:
             h.result = fn()  # execute side-effect immediately (bookkeeping only)
         return h
+
+    def compute_at(self, fn, *, flops=0.0, hbm_bytes=0.0, tag="",
+                   at: float = 0.0):
+        """Occupy the accelerator from `at`; returns (result, end_time)."""
+        dur = self.model.compute_time(flops, hbm_bytes)
+        end = self._occupy("compute", dur, f"compute:{tag}", at)
+        self.stage_times[tag] = self.stage_times.get(tag, 0.0) + dur
+        return (fn() if fn is not None else None), end
+
+
+class SimExecutor(ChannelSim):
+    """Single-request wrapper over :class:`ChannelSim` (legacy serial API).
+
+    ``t_now`` tracks the one request's control point exactly as before the
+    multi-request refactor; all timings are bit-identical to the historical
+    SimExecutor, so existing benchmarks reproduce.
+    """
+
+    def __init__(self, model: DeviceModel):
+        super().__init__(model)
+        self.t_now = 0.0
+
+    def now(self) -> float:
+        return self.t_now
+
+    def submit_io(self, fn, *, nbytes, n_requests, channel) -> IOHandle:
+        return self.submit_io_at(fn, nbytes=nbytes, n_requests=n_requests,
+                                 channel=channel, at=self.t_now)
 
     def wait(self, handle: IOHandle):
         self.t_now = max(self.t_now, handle.ready_at)
 
     def compute(self, fn, *, flops=0.0, hbm_bytes=0.0, tag=""):
-        dur = self.model.compute_time(flops, hbm_bytes)
-        end = self._occupy("compute", dur, f"compute:{tag}", self.t_now)
+        out, end = self.compute_at(fn, flops=flops, hbm_bytes=hbm_bytes,
+                                   tag=tag, at=self.t_now)
         self.t_now = end
-        self.stage_times[tag] = self.stage_times.get(tag, 0.0) + dur
-        return fn() if fn is not None else None
+        return out

@@ -1,0 +1,123 @@
+"""Hypothesis shim: use the real library when installed, else a tiny
+deterministic fallback so the suite collects (and still exercises the
+property tests) on containers without `hypothesis`.
+
+The fallback implements just the surface this repo uses:
+  given(**kwargs) / settings(max_examples=, deadline=) /
+  st.integers, st.floats, st.sampled_from, st.lists, st.tuples.
+Examples are drawn from a fixed-seed PRNG, so failures reproduce.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 20  # cap: fallback trades coverage for speed
+
+    class _Strategy:
+        def sample(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return self.lo + (self.hi - self.lo) * rng.random()
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def sample(self, rng):
+            return rng.choice(self.options)
+
+    class _Lists(_Strategy):
+        def __init__(self, elem, min_size=0, max_size=10):
+            self.elem = elem
+            self.min_size = min_size
+            self.max_size = max_size
+
+        def sample(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            return [self.elem.sample(rng) for _ in range(n)]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elems):
+            self.elems = elems
+
+        def sample(self, rng):
+            return tuple(e.sample(rng) for e in self.elems)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            return _Lists(elements, min_size, max_size)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Tuples(*elements)
+
+    st = _St()
+
+    def settings(max_examples=None, deadline=None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            import inspect
+
+            n = min(getattr(fn, "_compat_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xC04B)
+                for i in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"fallback-hypothesis example {i}: {drawn!r}"
+                        ) from e
+
+            # hide drawn params from pytest's fixture resolution
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strategies
+            ])
+            return wrapper
+
+        return deco

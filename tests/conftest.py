@@ -2,3 +2,5 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make tests/_hypothesis_compat.py importable regardless of pytest import mode
+sys.path.insert(0, os.path.dirname(__file__))
