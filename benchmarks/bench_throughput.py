@@ -7,6 +7,11 @@ P50/P95 arrival-to-first-token (queueing included) and goodput (completed
 requests per second of makespan). ContiguousKV's shorter, I/O-lean plans
 drain the queue faster, so its tail TTFT sits below IMPRESS at equal load.
 
+A decode section extends every request past the first token and reports
+mean TPOT, inter-token P95, decode token throughput, and the makespan
+speedup of the scheduler's continuous batching over unbatched decode at
+concurrency 4 (gated: batched must win).
+
 Standalone: ``PYTHONPATH=src python benchmarks/bench_throughput.py --quick``
 or through the harness: ``python -m benchmarks.run --only serving``.
 """
@@ -100,6 +105,41 @@ def run(quick: bool = False):
         assert p95["contiguous_kv"] < p95["impress"], (
             f"contiguous_kv P95 TTFT not below impress at c{conc}: "
             f"{p95['contiguous_kv']:.4f}s vs {p95['impress']:.4f}s")
+
+    # -- decode phase: TPOT / inter-token tail + continuous-batching margin --
+    conc = 4
+    decode_tokens = 8 if quick else 16
+    n_dec_req = 8 if quick else 16
+    makespans = {}
+    for system in SYSTEMS:
+        for batched in (True, False):
+            fleet = _fleet(system, model, prefix_len, budget, seed=0)
+            sched = Scheduler(fleet.engines, policy="fcfs",
+                              max_concurrency=conc, batch_decode=batched)
+            reqs = [
+                Request(request_id=i, suffix=rng_suffix.integers(0, 1000, 64),
+                        arrival=0.0, tenant=1, decode_tokens=decode_tokens)
+                for i in range(n_dec_req)
+            ]
+            s = summarize(sched.run(reqs))
+            if batched:
+                tag = f"serving/{system}/decode{decode_tokens}/c{conc}"
+                rows += [
+                    (f"{tag}/mean_tpot_ms", s["mean_tpot"] * 1e3, "ms"),
+                    (f"{tag}/p95_itl_ms", s["p95_itl"] * 1e3, "ms"),
+                    (f"{tag}/decode_tok_rate", s["decode_tok_rate"], "tok/s"),
+                ]
+            makespans[system, batched] = s["makespan"]
+    for system in SYSTEMS:
+        margin = makespans[system, False] / makespans[system, True]
+        rows.append((f"serving/{system}/decode{decode_tokens}/c{conc}"
+                     f"/batched_makespan_speedup", margin, "x"))
+    # continuous batching must beat unbatched decode at concurrency >= 4
+    ckv_margin = makespans["contiguous_kv", False] / makespans["contiguous_kv", True]
+    assert ckv_margin > 1.0, (
+        f"batched decode makespan not below unbatched at c{conc}: "
+        f"{makespans['contiguous_kv', True]:.4f}s vs "
+        f"{makespans['contiguous_kv', False]:.4f}s")
     return rows
 
 
@@ -111,7 +151,8 @@ def main():
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.6g},{derived}")
-    print("# gate ok: contiguous_kv p95 < impress at every offered load")
+    print("# gate ok: contiguous_kv p95 < impress at every offered load; "
+          "batched decode beats unbatched at c4")
 
 
 if __name__ == "__main__":

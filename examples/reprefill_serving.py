@@ -1,5 +1,7 @@
 """Serve a batch of few-shot requests over a shared prefix — the paper's
-end-to-end scenario — comparing ContiguousKV against all three baselines.
+end-to-end scenario — comparing ContiguousKV against all three baselines,
+then following the full request lifecycle (prefill -> first token ->
+per-token sparse decode) through the serving scheduler.
 
     PYTHONPATH=src python examples/reprefill_serving.py [--requests 6]
 """
@@ -22,6 +24,7 @@ from repro.core import (
 from repro.core.backends import RealCompute
 from repro.data.synthetic import make_task
 from repro.models import transformer as T
+from repro.serving import Request, Scheduler, summarize
 from repro.storage.timing import RealExecutor
 
 
@@ -29,6 +32,8 @@ def main():
     p = argparse.ArgumentParser()
     p.add_argument("--requests", type=int, default=6)
     p.add_argument("--budget", type=float, default=0.25)
+    p.add_argument("--decode-tokens", type=int, default=4,
+                   help="tokens generated past the first in the decode demo")
     args = p.parse_args()
 
     cfg = reduced_config("qwen2.5-14b", n_layers=4)
@@ -56,6 +61,26 @@ def main():
         warm = ttfts[1:] or ttfts  # first request pays jit compilation
         print(f"{name:14s} avg TTFT {np.mean(warm)*1e3:8.1f} ms"
               f"  tokens loaded {toks:7,d}")
+
+    # -- full lifecycle: prefill -> first token -> sparse decode -------------
+    print(f"\nprefill->decode ({args.decode_tokens} tokens/request, "
+          f"ContiguousKV, concurrent scheduler):")
+    sess = build_real_session(cfg, params, task.prefix, in_memory=True)
+    eng = ContiguousKVEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                             budget=args.budget, period=2, subperiod=1,
+                             device_cap=48, host_cap=96)
+    requests = [Request(request_id=rid, suffix=suffix,
+                        decode_tokens=args.decode_tokens)
+                for rid, (suffix, _) in enumerate(task.queries)]
+    completed = Scheduler(eng, max_concurrency=2).run(requests)
+    for c in completed:
+        tr = c.trace
+        print(f"req {c.request.request_id}: ttft={c.ttft*1e3:8.1f} ms  "
+              f"tpot={tr.tpot*1e3:7.1f} ms  {tr.n_decoded} tokens decoded")
+    s = summarize(completed)
+    print(f"mean TPOT {s['mean_tpot']*1e3:.1f} ms  "
+          f"ITL p95 {s['p95_itl']*1e3:.1f} ms  "
+          f"{s['decode_tok_rate']:.1f} tok/s")
 
 
 if __name__ == "__main__":

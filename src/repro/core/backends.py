@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sparse_attention as SA
+from repro.kernels.decode_attention.ops import decode_attention
 from repro.models.common import ModelConfig
 from repro.models.layers import rms_norm, swiglu
 from repro.models.attention import qkv_project
@@ -101,6 +102,63 @@ class RealCompute:
     def logits(self, h) -> np.ndarray:
         return np.asarray(_final_logits_kernel(self.params, h, self.cfg.norm_eps))
 
+    def decode_attend(self, layer: int, h, q, k_res, v_res, kv_suffix, kv_dec,
+                      kv_cur, page: int):
+        """One decode position's sparse attention over resident unit pages.
+
+        k_res/v_res: (n_res, page, n_kv, d) numpy pages of cache-resident
+        units; kv_suffix: (k, v) each (1, s, n_kv, d) from prefill; kv_dec:
+        earlier decode positions' [(k, v)] each (1, 1, n_kv, d); kv_cur: this
+        position's. The tail (suffix + decoded + current) is packed into
+        `page`-sized pages after the resident pages and the whole pool goes
+        through repro.kernels.decode_attention. Returns (h_out, mass) where
+        mass is the per-resident-page attention probability (AGC's A_j).
+        """
+        cfg = self.cfg
+        lp = _slice_layer(self.params, layer)
+        n_res = k_res.shape[0]
+        d = cfg.d_head
+        tail_k = [kv_cur[0]] if kv_suffix is None else [kv_suffix[0], kv_cur[0]]
+        tail_v = [kv_cur[1]] if kv_suffix is None else [kv_suffix[1], kv_cur[1]]
+        if kv_dec:
+            tail_k[-1:-1] = [k for k, _ in kv_dec]
+            tail_v[-1:-1] = [v for _, v in kv_dec]
+        tk = jnp.concatenate(tail_k, axis=1)[0]  # (t_tail, n_kv, d)
+        tv = jnp.concatenate(tail_v, axis=1)[0]
+        t_tail = tk.shape[0]
+        n_tail = -(-t_tail // page)
+        pad = n_tail * page - t_tail
+        if pad:
+            tk = jnp.pad(tk, ((0, pad), (0, 0), (0, 0)))
+            tv = jnp.pad(tv, ((0, pad), (0, 0), (0, 0)))
+        k_pool = jnp.concatenate(
+            [jnp.asarray(k_res, tk.dtype), tk.reshape(n_tail, page, cfg.n_kv_heads, d)]
+        )[None]
+        v_pool = jnp.concatenate(
+            [jnp.asarray(v_res, tv.dtype), tv.reshape(n_tail, page, cfg.n_kv_heads, d)]
+        )[None]
+        n_pages = n_res + n_tail
+        table = jnp.arange(n_pages, dtype=jnp.int32)[None]
+        lengths = jnp.array([n_res * page + t_tail], jnp.int32)
+        q1 = q[:, 0]  # (1, n_q, d) — single decode position
+        out = decode_attention(q1, k_pool, v_pool, table, lengths)
+        attn = out.reshape(1, 1, cfg.n_heads, d)
+        o = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"])
+        h = h + o
+        h = _ffn(h, lp, cfg, dropless=True)
+        # per-resident-page attention mass (decode-time cache scores)
+        group = cfg.n_heads // cfg.n_kv_heads
+        qg = q1.reshape(1, cfg.n_kv_heads, group, d).astype(jnp.float32)
+        flat_k = k_pool.reshape(1, n_pages * page, cfg.n_kv_heads, d)
+        logits = jnp.einsum("bngd,btnd->bngt", qg,
+                            flat_k.astype(jnp.float32)) * d ** -0.5
+        pos = jnp.arange(n_pages * page)
+        logits = jnp.where(pos[None, None, None, :] < lengths[0], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        mass = p[..., : n_res * page].reshape(1, cfg.n_kv_heads, group, n_res, page)
+        mass = mass.sum(axis=(-1,)).mean(axis=(0, 1, 2))  # (n_res,)
+        return h, np.asarray(mass)
+
 
 class SimCompute:
     """Paper-scale simulation: no arrays, selection from a workload model."""
@@ -128,3 +186,11 @@ class SimCompute:
 
     def logits(self, h):
         return None
+
+    def decode_scores(self, request_id: int, step: int) -> np.ndarray:
+        """Token-importance field for decode position `step`."""
+        return self.workload.decode_token_scores(request_id, step)
+
+    def decode_mass(self, request_id: int, layer: int, n_units: int) -> np.ndarray:
+        """Per-attended-unit attention mass for AGC decode-time updates."""
+        return self.workload.chunk_mass(request_id, layer, np.ones(n_units, bool))

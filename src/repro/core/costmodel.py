@@ -59,3 +59,34 @@ def probe_bytes(cfg: ModelConfig, prefix_len: int, key_ratio: float = 1.0) -> in
 def token_kv_bytes(cfg: ModelConfig) -> int:
     """K+V bytes per token per layer (bf16)."""
     return 2 * cfg.kv_dim * 2
+
+
+def decode_layer_cost(cfg: ModelConfig, attended_tokens: int) -> LayerCost:
+    """One decode position through one layer: the suffix cost at s=1."""
+    return suffix_layer_cost(cfg, 1, attended_tokens)
+
+
+def decode_weight_bytes(cfg: ModelConfig) -> float:
+    """HBM weight bytes streamed per decode step (all layers + LM head).
+
+    This is the batch-shared part of a decode step's memory traffic:
+    continuous batching pays it once per iteration regardless of how many
+    requests' tokens are in the batch."""
+    return float(cfg.n_layers * layer_weight_bytes(cfg)
+                 + cfg.d_model * cfg.vocab_size * 2)
+
+
+def decode_step_cost(cfg: ModelConfig, attended_per_layer) -> LayerCost:
+    """One decode position across all layers + the LM head.
+
+    `attended_per_layer` gives the token count attended at each layer
+    (selected units * unit_tokens + suffix + decoded-so-far)."""
+    flops = 0.0
+    hbm = 0.0
+    for m in attended_per_layer:
+        lc = decode_layer_cost(cfg, int(m))
+        flops += lc.flops
+        hbm += lc.hbm_bytes
+    flops += 2.0 * cfg.d_model * cfg.vocab_size
+    hbm += cfg.d_model * cfg.vocab_size * 2
+    return LayerCost(flops=float(flops), hbm_bytes=float(hbm))

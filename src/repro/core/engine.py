@@ -94,12 +94,33 @@ class ReprefillTrace:
     misses: int = 0
     selected_per_period: List[np.ndarray] = dataclasses.field(default_factory=list)
     selected_per_layer: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    # decode phase (request lifecycle past the first token)
+    first_token_at: float = 0.0  # absolute clock time of the first token
+    decode_times: List[float] = dataclasses.field(default_factory=list)
+    decode_selected: List[np.ndarray] = dataclasses.field(default_factory=list)
 
     @property
     def read_amplification(self) -> float:
         """Demand-fetch amplification (Fig. 4): bytes read / bytes required.
         Speculative prefetch traffic is tracked separately (ssd_bytes_spec)."""
         return self.ssd_bytes_demand / max(self.needed_bytes, 1)
+
+    @property
+    def n_decoded(self) -> int:
+        return len(self.decode_times)
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token over the decode phase."""
+        if not self.decode_times:
+            return 0.0
+        return (self.decode_times[-1] - self.first_token_at) / len(self.decode_times)
+
+    def inter_token_latencies(self) -> np.ndarray:
+        """Gaps between consecutive emitted tokens (first token excluded)."""
+        if not self.decode_times:
+            return np.empty(0)
+        return np.diff(np.array([self.first_token_at] + self.decode_times))
 
     def add_stage(self, tag: str, dt: float):
         self.stages[tag] = self.stages.get(tag, 0.0) + dt
@@ -148,20 +169,27 @@ class _EngineBase:
 
     # -- plan entry points ----------------------------------------------------
     def plan(self, suffix_tokens, request_id: int = 0,
-             arrival: float = 0.0) -> StepPlan:
-        """Build a resumable step plan for one request (does not run it)."""
+             arrival: float = 0.0, decode_tokens: int = 0) -> StepPlan:
+        """Build a resumable step plan for one request (does not run it).
+
+        With ``decode_tokens=N`` the plan continues past the first token:
+        after the Re-Prefill ComputeOps it yields per-token decode steps
+        (phase="decode") — sparse decode attention over the resident units.
+        """
         clock = RequestClock(arrival)
         trace = ReprefillTrace(system=self.name)
-        gen = self._steps(np.asarray(suffix_tokens), request_id, clock, trace)
+        gen = self._steps(np.asarray(suffix_tokens), request_id, clock, trace,
+                          decode_tokens=decode_tokens)
         return StepPlan(request_id=request_id, gen=gen, clock=clock, trace=trace)
 
-    def reprefill(self, suffix_tokens, request_id: int = 0):
+    def reprefill(self, suffix_tokens, request_id: int = 0,
+                  decode_tokens: int = 0):
         """Single-request compatibility wrapper around the step plan."""
-        p = self.plan(suffix_tokens, request_id)
+        p = self.plan(suffix_tokens, request_id, decode_tokens=decode_tokens)
         logits = drive_serial(self.ex, p)
         return logits, p.trace
 
-    def _steps(self, suffix_tokens, request_id, clock, trace):
+    def _steps(self, suffix_tokens, request_id, clock, trace, decode_tokens=0):
         raise NotImplementedError
 
     # -- keys ------------------------------------------------------------------
@@ -353,6 +381,118 @@ class _EngineBase:
             v_sel[i] = rec[:, 1]
         return k_sel, v_sel, valid
 
+    def _gather_unit_pages(self, layer: int, units) -> Tuple[np.ndarray, np.ndarray]:
+        """Resident unit KV as decode-attention pages: (n_units, page, n_kv, d)."""
+        layout = self.session.store.layout
+        g = layout.geom
+        page = layout.unit_tokens
+        n = len(units)
+        k = np.zeros((n, page, g.n_kv_heads, g.d_head), np.float16)
+        v = np.zeros_like(k)
+        for i, u in enumerate(units):
+            rec = self._unit_data(layer, int(u))
+            k[i] = rec[:, 0]
+            v[i] = rec[:, 1]
+        return k, v
+
+    # -- decode phase ----------------------------------------------------------
+    def _decode_phase(self, decode_tokens, request_id, clock, trace, logits,
+                      suffix_len, resident, handles, kv_suffix):
+        """Per-token decode steps after the first token (phase="decode").
+
+        sim  — decode-time selection drifts per token (workload decode score
+               field at the engine's own unit granularity), cache misses turn
+               into demand fetches (WaitOps), and each token is one
+               costmodel-priced ComputeOp a scheduler may batch with other
+               requests' decode steps;
+        real — sparse decode attention (repro.kernels.decode_attention) over
+               the prefill-resident units plus the request's own suffix and
+               decoded-token KV; greedy next-token feedback.
+
+        Both modes refresh the attention-guided cache from decode-time
+        scores (Eq. 2 keeps accumulating past the first token).
+        """
+        if decode_tokens <= 0:
+            return logits
+        be, cfg = self.backend, self.cfg
+        layout = self.session.store.layout
+        unit_tokens = layout.unit_tokens
+        trace.first_token_at = clock.t
+        weight_bytes = CM.decode_weight_bytes(cfg)
+        tok = int(np.argmax(logits[0, -1])) if logits is not None else 0
+        kv_dec: Dict[int, list] = {l: [] for l in range(cfg.n_layers)}
+        for step in range(decode_tokens):
+            if self.sim:
+                scores = be.decode_scores(request_id, step)
+                cs = np.add.reduceat(
+                    np.pad(scores, (0, layout.n_units * unit_tokens - len(scores))),
+                    np.arange(0, layout.n_units * unit_tokens, unit_tokens),
+                )
+                selected = select_topk_chunks(cs, self.budget)
+                per_layer = {l: selected for l in range(cfg.n_layers)}
+            else:
+                per_layer = {l: np.asarray(resident.get(l, []), dtype=int)
+                             for l in range(cfg.n_layers)}
+            trace.decode_selected.append(per_layer[0])
+            # demand-fetch cache misses, then wait on in-flight transfers
+            for l, units in per_layer.items():
+                self._submit_units(l, list(units), trace, handles, clock)
+            t0 = clock.t
+            waited = set()
+            for l, units in per_layer.items():
+                for u in units:
+                    h = handles.get(self._key(l, u))
+                    if h is None or id(h) in waited:
+                        continue
+                    pending = (h.ready_at > clock.t if self.sim
+                               else h.future is not None and not h.future.done())
+                    if pending:
+                        waited.add(id(h))
+                        yield WaitOp(h, tag="decode_io")
+            trace.add_stage("decode_io", clock.t - t0)
+
+            attended = [len(per_layer[l]) * unit_tokens + suffix_len + step + 1
+                        for l in range(cfg.n_layers)]
+            cost = CM.decode_step_cost(cfg, attended)
+            if self.sim:
+                fn = None
+            else:
+                pools = {l: self._gather_unit_pages(l, units)
+                         for l, units in per_layer.items()}
+                pos = self.session.prefix_len + suffix_len + step
+
+                def fn(tok_now=tok, pos=pos, pools=pools):
+                    h = be.embed(np.array([tok_now]))
+                    masses = {}
+                    for l in range(cfg.n_layers):
+                        _, q, k_cur, v_cur = be.part_a(l, h, pos)
+                        h, masses[l] = be.decode_attend(
+                            l, h, q, pools[l][0], pools[l][1],
+                            kv_suffix.get(l), kv_dec[l], (k_cur, v_cur),
+                            unit_tokens)
+                        kv_dec[l].append((k_cur, v_cur))
+                    return be.logits(h), masses
+
+            out = yield ComputeOp(self._bound(request_id, fn) if fn else None,
+                                  flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                                  tag="decode", phase="decode",
+                                  weight_bytes=weight_bytes)
+            masses = None
+            if out is not None:
+                logits, masses = out
+                tok = int(np.argmax(logits[0, -1]))
+            for l, units in per_layer.items():
+                if isinstance(self.cache, AttentionGuidedCache) and len(units):
+                    if masses is not None:
+                        m = np.asarray(masses[l])
+                    else:
+                        m = be.decode_mass(request_id, l, len(units))
+                    for i, u in enumerate(units):
+                        self.cache.update_importance(self._key(l, u), float(m[i]))
+                self._insert_cache(l, units)
+            trace.decode_times.append(clock.t)
+        return logits
+
 
 # ---------------------------------------------------------------------------
 # ContiguousKV
@@ -370,13 +510,15 @@ class ContiguousKVEngine(_EngineBase):
         self.inter_period = inter_period and prefetch
         self.chunk_tokens = session.meta.chunk_tokens
 
-    def _steps(self, suffix_tokens, request_id, clock, trace):
+    def _steps(self, suffix_tokens, request_id, clock, trace, decode_tokens=0):
         be, cfg = self.backend, self.cfg
         meta = self.session.meta
         if hasattr(be, "new_request"):
             be.new_request(request_id)
         s = len(suffix_tokens)
         t_start = clock.t
+        kv_suffix: Dict[int, Tuple] = {}
+        keep_suffix_kv = decode_tokens > 0 and not self.sim
 
         h = yield ComputeOp(lambda: be.embed(suffix_tokens),
                             flops=2.0 * s * cfg.d_model, tag="compute")
@@ -438,6 +580,8 @@ class ContiguousKVEngine(_EngineBase):
                     self._submit_units(l, list(selected), trace, handles, clock)
                 yield from self._wait_keys(l, selected, handles, trace, "kv_io", clock)
                 k_sel, v_sel, valid = self._gather_chunks(l, selected, meta.chunk_tokens)
+                if keep_suffix_kv:
+                    kv_suffix[l] = (k_suf, v_suf)
                 fl, hb = self._cost_part_b(s, n_attended)
                 h, mass = yield ComputeOp(
                     self._bound(request_id,
@@ -454,6 +598,9 @@ class ContiguousKVEngine(_EngineBase):
         logits = yield ComputeOp(lambda hh=h: be.logits(hh),
                                  flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
         trace.ttft = clock.t - t_start
+        logits = yield from self._decode_phase(
+            decode_tokens, request_id, clock, trace, logits, s,
+            trace.selected_per_layer, handles, kv_suffix)
         self._sweep_data()
         return logits
 
@@ -469,7 +616,7 @@ class _BlockBaselineEngine(_EngineBase):
     probe_ratio = 1.0  # fraction of key dims loaded for probing
     probe_prefetch = False  # IMPRESS: prefetch next layer's probe keys
 
-    def _steps(self, suffix_tokens, request_id, clock, trace):
+    def _steps(self, suffix_tokens, request_id, clock, trace, decode_tokens=0):
         be, cfg = self.backend, self.cfg
         if hasattr(be, "new_request"):
             be.new_request(request_id)
@@ -480,6 +627,9 @@ class _BlockBaselineEngine(_EngineBase):
         handles: Dict = {}
         layout = self.session.store.layout
         probe_handles: Dict[int, IOHandle] = {}
+        kv_suffix: Dict[int, Tuple] = {}
+        resident: Dict[int, np.ndarray] = {}
+        keep_suffix_kv = decode_tokens > 0 and not self.sim
 
         for l in range(cfg.n_layers):
             x, q, k_suf, v_suf = yield ComputeOp(
@@ -522,6 +672,9 @@ class _BlockBaselineEngine(_EngineBase):
                                needed_bytes_per_unit=needed)
             yield from self._wait_keys(l, blocks, handles, trace, "kv_io", clock)
             k_sel, v_sel, valid = self._gather_tokens(l, tokens, blocks)
+            resident[l] = np.asarray(blocks, dtype=int)
+            if keep_suffix_kv:
+                kv_suffix[l] = (k_suf, v_suf)
             fl, hb = self._cost_part_b(s, n_attended)
             h, mass = yield ComputeOp(
                 self._bound(request_id,
@@ -542,6 +695,9 @@ class _BlockBaselineEngine(_EngineBase):
         logits = yield ComputeOp(lambda hh=h: be.logits(hh),
                                  flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
         trace.ttft = clock.t - t_start
+        logits = yield from self._decode_phase(
+            decode_tokens, request_id, clock, trace, logits, s,
+            resident, handles, kv_suffix)
         self._sweep_data()
         return logits
 
@@ -591,13 +747,15 @@ class ASLRUEngine(_BlockBaselineEngine):
             v_sel[i] = rec[:, 1]
         return k_sel, v_sel, valid
 
-    def _steps(self, suffix_tokens, request_id, clock, trace):
+    def _steps(self, suffix_tokens, request_id, clock, trace, decode_tokens=0):
         # full blocks are chunk-shaped: reuse block path with chunk_tokens=block
         be, cfg = self.backend, self.cfg
         if hasattr(be, "new_request"):
             be.new_request(request_id)
         s = len(suffix_tokens)
         t_start = clock.t
+        kv_suffix: Dict[int, Tuple] = {}
+        keep_suffix_kv = decode_tokens > 0 and not self.sim
         h = yield ComputeOp(lambda: be.embed(suffix_tokens),
                             flops=2.0 * s * cfg.d_model, tag="compute")
         handles: Dict = {}
@@ -613,6 +771,8 @@ class ASLRUEngine(_BlockBaselineEngine):
                 flops=self._cost_part_a(s), tag="compute")
             yield from self._wait_keys(l, blocks, handles, trace, "kv_io", clock)
             k_sel, v_sel, valid = self._gather_tokens(l, None, blocks)
+            if keep_suffix_kv:
+                kv_suffix[l] = (k_suf, v_suf)
             fl, hb = self._cost_part_b(s, n_attended)
             h, _ = yield ComputeOp(
                 self._bound(request_id,
@@ -624,6 +784,10 @@ class ASLRUEngine(_BlockBaselineEngine):
         logits = yield ComputeOp(lambda hh=h: be.logits(hh),
                                  flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
         trace.ttft = clock.t - t_start
+        resident = {l: np.asarray(blocks, dtype=int) for l in range(cfg.n_layers)}
+        logits = yield from self._decode_phase(
+            decode_tokens, request_id, clock, trace, logits, s,
+            resident, handles, kv_suffix)
         self._sweep_data()
         return logits
 

@@ -133,6 +133,18 @@ class SyntheticWorkload:
     def token_scores(self, request_id: int, layer: int) -> np.ndarray:
         return self._request_field(request_id)[layer].copy()
 
+    def decode_token_scores(self, request_id: int, step: int) -> np.ndarray:
+        """Importance field for decode position `step` (0-indexed after the
+        first token): random-walk drift away from the last prefill layer, so
+        decode-time selection overlaps the resident set but keeps shifting —
+        the cache-miss dynamics decode plans must price."""
+        base = self._request_field(request_id)[-1]
+        rng = np.random.default_rng((self.seed, request_id, step, 0xDEC0DE))
+        noise = rng.exponential(1.0, self.prefix_len) * base.mean()
+        cur = (1 - self.layer_drift) ** (step + 1) * base
+        cur = cur + (1 - (1 - self.layer_drift) ** (step + 1)) * noise
+        return cur / cur.sum()
+
     def chunk_mass(self, request_id: int, layer: int, sel_valid: np.ndarray) -> np.ndarray:
         n_valid = int(sel_valid.sum())
         mass = np.zeros(len(sel_valid))

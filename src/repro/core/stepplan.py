@@ -43,12 +43,22 @@ class RequestClock:
 
 @dataclasses.dataclass
 class ComputeOp:
-    """Occupy the accelerator; the generator receives ``fn()``'s value."""
+    """Occupy the accelerator; the generator receives ``fn()``'s value.
+
+    ``phase`` distinguishes prefill ops from per-token decode steps — the
+    serving scheduler may coalesce decode-phase ops of concurrent plans into
+    one batched accelerator occupation (continuous batching).  For batchable
+    ops, ``weight_bytes`` is the slice of ``hbm_bytes`` that is *shared*
+    across a batch (streamed model weights): a batch pays it once while the
+    per-request remainder (KV traffic) is summed.
+    """
 
     fn: Optional[Callable]
     flops: float = 0.0
     hbm_bytes: float = 0.0
     tag: str = "compute"
+    phase: str = "prefill"
+    weight_bytes: float = 0.0
 
 
 @dataclasses.dataclass

@@ -13,6 +13,12 @@ latency/goodput digest:
 
   PYTHONPATH=src python -m repro.launch.serve --mode sim --model qwen2.5-7b \
       --tenants 4 --requests 32 --concurrency 4 --policy cache_aware
+
+``--decode-tokens N`` extends every request past the first token: per-token
+sparse decode steps run through the scheduler's continuous batching and the
+digest adds mean TPOT / inter-token P50/P95 / decode token throughput.
+``--ttft-slo S`` attaches a TTFT deadline to every request (pair with
+``--policy slo_aware`` for earliest-deadline-first admission).
 """
 from __future__ import annotations
 
@@ -57,7 +63,9 @@ def _real_main(args):
         kw.update(budget=args.budget)
     eng = ENGINE_CLASSES[args.system](sess, RealCompute(cfg, params), ex, **kw)
 
-    requests = [Request(request_id=rid, suffix=suffix)
+    requests = [Request(request_id=rid, suffix=suffix,
+                        decode_tokens=args.decode_tokens,
+                        ttft_target=args.ttft_slo)
                 for rid, (suffix, _) in enumerate(task.queries)]
     sched = Scheduler(eng, policy=args.policy, max_concurrency=args.concurrency)
     completed = sched.run(requests)
@@ -69,14 +77,23 @@ def _real_main(args):
         pred = int(np.argmax(c.result[0, -1]))
         correct += int(pred == task.label_token(gold))
         tr = c.trace
+        dec = (f" tpot={tr.tpot*1e3:6.1f}ms ({tr.n_decoded} tok)"
+               if tr.decode_times else "")
         print(f"req {rid:2d}: ttft={c.ttft*1e3:7.1f}ms ssd={tr.ssd_bytes/1e3:8.1f}KB "
-              f"amp={tr.read_amplification:5.2f} hits(d/h)={tr.hits_device}/{tr.hits_host}")
+              f"amp={tr.read_amplification:5.2f} hits(d/h)={tr.hits_device}/{tr.hits_host}"
+              f"{dec}")
     s = summarize(completed)
     print(f"concurrency={args.concurrency} policy={args.policy} "
           f"p50={s['p50_ttft']*1e3:.1f}ms p95={s['p95_ttft']*1e3:.1f}ms "
           f"goodput={s['goodput_rps']:.2f} req/s")
-    print(f"label-token accuracy (untrained model => chance-level): "
-          f"{correct}/{len(task.queries)}")
+    if "mean_tpot" in s:
+        print(f"decode: mean TPOT={s['mean_tpot']*1e3:.1f}ms "
+              f"ITL p95={s['p95_itl']*1e3:.1f}ms "
+              f"{s['decode_tok_rate']:.1f} tok/s")
+    if args.decode_tokens == 0:
+        # with decode, c.result is the *last* token's logits, not the label
+        print(f"label-token accuracy (untrained model => chance-level): "
+              f"{correct}/{len(task.queries)}")
 
 
 def _sim_main(args):
@@ -89,22 +106,36 @@ def _sim_main(args):
     requests = [
         Request(request_id=i, suffix=rng.integers(0, 1000, 64),
                 arrival=float(arrivals[i]),
-                tenant=1 + i % args.tenants)
+                tenant=1 + i % args.tenants,
+                decode_tokens=args.decode_tokens,
+                ttft_target=args.ttft_slo)
         for i in range(args.requests)
     ]
     sched = Scheduler(fleet.engines, policy=args.policy,
-                      max_concurrency=args.concurrency)
+                      max_concurrency=args.concurrency,
+                      batch_decode=not args.no_batch_decode)
     completed = sched.run(requests)
     for c in completed:
+        tr = c.trace
+        dec = (f" tpot={tr.tpot*1e3:6.1f}ms" if tr.decode_times else "")
         print(f"req {c.request.request_id:3d} tenant={c.request.tenant} "
               f"arr={c.request.arrival*1e3:8.1f}ms queue={c.queue_delay*1e3:7.1f}ms "
-              f"ttft={c.ttft*1e3:8.1f}ms hits(d/h)={c.trace.hits_device}/{c.trace.hits_host}")
+              f"ttft={c.ttft*1e3:8.1f}ms hits(d/h)={tr.hits_device}/{tr.hits_host}"
+              f"{dec}")
     s = summarize(completed)
     print(f"\n{args.system} tenants={args.tenants} load={args.rate:.1f} req/s "
           f"concurrency={args.concurrency} policy={args.policy}")
     print(f"p50={s['p50_ttft']*1e3:.1f}ms p95={s['p95_ttft']*1e3:.1f}ms "
           f"goodput={s['goodput_rps']:.2f} req/s "
           f"mean_queue={s['mean_queue_delay']*1e3:.1f}ms")
+    if "mean_tpot" in s:
+        batched = "off" if args.no_batch_decode else "on"
+        print(f"decode: {s['decode_tokens']} tokens, mean TPOT={s['mean_tpot']*1e3:.1f}ms "
+              f"ITL p50/p95={s['p50_itl']*1e3:.1f}/{s['p95_itl']*1e3:.1f}ms "
+              f"{s['decode_tok_rate']:.1f} tok/s (continuous batching {batched})")
+    if "slo_attainment" in s:
+        print(f"SLO attainment (ttft <= {args.ttft_slo*1e3:.0f}ms): "
+              f"{100*s['slo_attainment']:.1f}%")
     usage = fleet.cache.tenant_usage()
     for tenant in sorted(usage):
         u = usage[tenant]
@@ -122,6 +153,12 @@ def main():
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--concurrency", type=int, default=4)
     p.add_argument("--policy", default="fcfs", choices=list(POLICIES))
+    p.add_argument("--decode-tokens", type=int, default=0,
+                   help="tokens to generate past the first (decode phase)")
+    p.add_argument("--ttft-slo", type=float, default=None,
+                   help="per-request TTFT target in seconds (slo_aware policy)")
+    p.add_argument("--no-batch-decode", action="store_true",
+                   help="disable continuous batching of decode steps (sim)")
     # real mode
     p.add_argument("--arch", default="qwen2.5-14b")
     p.add_argument("--dataset", default="rte")

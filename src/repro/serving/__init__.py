@@ -21,6 +21,7 @@ from repro.serving.scheduler import (
     FCFSPolicy,
     Request,
     Scheduler,
+    SLOAwarePolicy,
     summarize,
 )
 from repro.serving.tenancy import ENGINE_CLASSES, TenantFleet, build_sim_fleet
@@ -36,6 +37,7 @@ __all__ = [
     "FCFSPolicy",
     "Request",
     "Scheduler",
+    "SLOAwarePolicy",
     "summarize",
     "ENGINE_CLASSES",
     "TenantFleet",

@@ -21,7 +21,14 @@ Admission policies:
   fcfs        — strict arrival order;
   cache_aware — prefer the queued request whose tenant has the most resident
                 units in the shared cache (prefix-affinity batching: ride the
-                warm cache before it is evicted by other tenants).
+                warm cache before it is evicted by other tenants);
+  slo_aware   — earliest-deadline-first over per-request TTFT targets.
+
+Decode-phase requests (``Request.decode_tokens > 0``) keep yielding per-token
+steps after the first token.  The sim driver coalesces runnable decode-phase
+ComputeOps of all active plans into a single batched accelerator occupation
+per iteration (continuous batching: FLOPs and per-request KV traffic sum,
+the weight stream is paid once) — disable with ``batch_decode=False``.
 """
 from __future__ import annotations
 
@@ -47,6 +54,8 @@ class Request:
     suffix: np.ndarray
     arrival: float = 0.0
     tenant: int = 0
+    decode_tokens: int = 0  # tokens to generate past the first (decode phase)
+    ttft_target: Optional[float] = None  # per-request TTFT SLO, seconds
 
 
 @dataclasses.dataclass
@@ -59,7 +68,16 @@ class CompletedRequest:
 
     @property
     def ttft(self) -> float:
-        """Arrival-to-first-token: queueing delay + service time."""
+        """Arrival-to-first-token: queueing delay + prefill service time.
+        (With a decode phase, `finish` covers the whole lifecycle, so the
+        first-token time comes from the trace, not from `finish`.)"""
+        if getattr(self.trace, "ttft", 0.0):
+            return self.queue_delay + self.trace.ttft
+        return self.finish - self.request.arrival
+
+    @property
+    def e2e_latency(self) -> float:
+        """Arrival to last emitted token (== ttft when decode_tokens=0)."""
         return self.finish - self.request.arrival
 
     @property
@@ -69,6 +87,12 @@ class CompletedRequest:
     @property
     def service_time(self) -> float:
         return self.finish - self.admitted
+
+    @property
+    def slo_met(self) -> Optional[bool]:
+        if self.request.ttft_target is None:
+            return None
+        return self.ttft <= self.request.ttft_target
 
 
 # ---------------------------------------------------------------------------
@@ -98,7 +122,26 @@ class CacheAffinityPolicy:
         return max(queued, key=lambda r: (affinity(r), -r.arrival, -r.request_id))
 
 
-POLICIES = {"fcfs": FCFSPolicy, "cache_aware": CacheAffinityPolicy}
+class SLOAwarePolicy:
+    """Earliest-deadline-first over per-request TTFT targets.
+
+    The deadline of a request is ``arrival + ttft_target``; requests without
+    a target sort last (deadline = +inf) and fall back to FCFS among
+    themselves, so latency-sensitive traffic jumps the best-effort queue."""
+
+    name = "slo_aware"
+
+    def select(self, queued: Sequence[Request], engines) -> Request:
+        def deadline(r: Request) -> float:
+            if r.ttft_target is None:
+                return float("inf")
+            return r.arrival + r.ttft_target
+
+        return min(queued, key=lambda r: (deadline(r), r.arrival, r.request_id))
+
+
+POLICIES = {"fcfs": FCFSPolicy, "cache_aware": CacheAffinityPolicy,
+            "slo_aware": SLOAwarePolicy}
 
 
 class _Active:
@@ -124,7 +167,7 @@ class Scheduler:
     """
 
     def __init__(self, engines, *, policy: Union[str, object] = "fcfs",
-                 max_concurrency: int = 4):
+                 max_concurrency: int = 4, batch_decode: bool = True):
         if not isinstance(engines, dict):
             engines = {getattr(engines, "tenant", 0): engines}
         assert engines, "need at least one engine"
@@ -135,6 +178,9 @@ class Scheduler:
         self.ex = next(iter(engines.values())).ex
         self.policy = POLICIES[policy]() if isinstance(policy, str) else policy
         self.max_concurrency = max_concurrency
+        # continuous batching: coalesce runnable decode-phase ComputeOps of
+        # all active plans into one batched accelerator occupation (sim)
+        self.batch_decode = batch_decode
 
     def run(self, requests: Sequence[Request]) -> List[CompletedRequest]:
         requests = list(requests)
@@ -156,9 +202,67 @@ class Scheduler:
             if not active:
                 continue
             a = min(active, key=lambda x: x.resume)
-            self._step_sim(a, active, slots, done)
+            batch = self._decode_batch(a, active, slots, done)
+            if batch is not None:
+                self._step_sim_batch(batch, active, slots, done)
+            else:
+                self._step_sim(a, active, slots, done)
         done.sort(key=lambda c: c.request.request_id)
         return done
+
+    def _decode_batch(self, a: _Active, active, slots, done) -> Optional[List[_Active]]:
+        """Assemble one continuous-batching iteration around plan `a`, or None.
+
+        When the earliest runnable op is a decode-phase ComputeOp, the
+        iteration window is one token time (the op's own duration past the
+        accelerator-free gate).  Peers blocked on I/O that completes inside
+        the window are advanced first (their wait times are fixed by the
+        handle, so resolving them early is time-faithful), then every plan
+        whose decode ComputeOp is runnable inside the window joins the batch.
+        The earliest plan is delayed by at most one token time — the standard
+        iteration-assembly cost of continuous batching."""
+        if not (self.batch_decode and isinstance(a.op, ComputeOp)
+                and a.op.phase == "decode"):
+            return None
+        gate = max(a.resume, self.ex.free_at["compute"])
+        window = gate + self.ex.model.compute_time(a.op.flops, a.op.hbm_bytes)
+        while True:
+            waiting = [b for b in active
+                       if b is not a and isinstance(b.op, WaitOp)
+                       and b.resume <= window]
+            if not waiting:
+                break
+            b = min(waiting, key=lambda x: x.resume)
+            b.plan.clock.t = b.resume
+            send = resolve_handle(b.op.handle)
+            try:
+                b.op = b.plan.gen.send(send)
+                b.resume = b.plan.resume_time(b.op)
+            except StopIteration as stop:
+                active.remove(b)
+                heapq.heappush(slots, b.plan.clock.t)
+                done.append(CompletedRequest(b.request, b.plan.trace, stop.value,
+                                             b.admitted, b.plan.clock.t))
+        return [b for b in active
+                if isinstance(b.op, ComputeOp) and b.op.phase == "decode"
+                and b.resume <= window]
+
+    def _step_sim_batch(self, members: List[_Active], active, slots, done):
+        start = max(b.resume for b in members)
+        items = [(b.op.fn, b.op.flops, b.op.hbm_bytes, b.op.weight_bytes)
+                 for b in members]
+        outs, end = self.ex.compute_batch_at(items, tag=members[0].op.tag,
+                                             at=start)
+        for b, send in zip(members, outs):
+            b.plan.clock.t = end
+            try:
+                b.op = b.plan.gen.send(send)
+                b.resume = b.plan.resume_time(b.op)
+            except StopIteration as stop:
+                active.remove(b)
+                heapq.heappush(slots, end)
+                done.append(CompletedRequest(b.request, b.plan.trace, stop.value,
+                                             b.admitted, end))
 
     def _admit_sim(self, pending, active, slots, done):
         while pending and len(active) < self.max_concurrency:
@@ -177,7 +281,8 @@ class Scheduler:
             pending.remove(req)
             start = max(req.arrival, heapq.heappop(slots))
             eng = self.engines[req.tenant]
-            plan = eng.plan(req.suffix, req.request_id, arrival=start)
+            plan = eng.plan(req.suffix, req.request_id, arrival=start,
+                            decode_tokens=req.decode_tokens)
             a = _Active(req, plan, start)
             try:
                 a.op = plan.gen.send(None)
@@ -221,7 +326,8 @@ class Scheduler:
                 req = self.policy.select(pending, self.engines)
                 pending.remove(req)
                 eng = self.engines[req.tenant]
-                plan = eng.plan(req.suffix, req.request_id)
+                plan = eng.plan(req.suffix, req.request_id,
+                                decode_tokens=req.decode_tokens)
                 plan.clock.t = ex.now()
                 a = _Active(req, plan, plan.clock.t)
                 try:
@@ -263,14 +369,18 @@ class Scheduler:
 # summary helpers
 # ---------------------------------------------------------------------------
 def summarize(completed: Sequence[CompletedRequest]) -> Dict[str, float]:
-    """Latency/goodput digest of one serving run."""
+    """Latency/goodput digest of one serving run.
+
+    Decode-phase metrics (mean TPOT, P50/P95 inter-token latency, decode
+    token throughput) appear whenever any completed request generated
+    tokens past the first."""
     if not completed:
         return {"n": 0}
     ttfts = np.array([c.ttft for c in completed])
     arrivals = np.array([c.request.arrival for c in completed])
     finishes = np.array([c.finish for c in completed])
     makespan = float(finishes.max() - arrivals.min())
-    return {
+    out = {
         "n": len(completed),
         "p50_ttft": float(np.percentile(ttfts, 50)),
         "p95_ttft": float(np.percentile(ttfts, 95)),
@@ -280,3 +390,20 @@ def summarize(completed: Sequence[CompletedRequest]) -> Dict[str, float]:
         "goodput_rps": len(completed) / max(makespan, 1e-12),
         "mean_queue_delay": float(np.mean([c.queue_delay for c in completed])),
     }
+    itls = [c.trace.inter_token_latencies() for c in completed
+            if getattr(c.trace, "decode_times", None)]
+    if itls:
+        all_itl = np.concatenate(itls)
+        tpots = [c.trace.tpot for c in completed if c.trace.decode_times]
+        n_tokens = int(sum(len(x) for x in itls))
+        out.update({
+            "decode_tokens": n_tokens,
+            "mean_tpot": float(np.mean(tpots)),
+            "p50_itl": float(np.percentile(all_itl, 50)),
+            "p95_itl": float(np.percentile(all_itl, 95)),
+            "decode_tok_rate": n_tokens / max(makespan, 1e-12),
+        })
+    slo = [c.slo_met for c in completed if c.slo_met is not None]
+    if slo:
+        out["slo_attainment"] = float(np.mean(slo))
+    return out

@@ -178,6 +178,25 @@ class ChannelSim(BaseExecutor):
         self.stage_times[tag] = self.stage_times.get(tag, 0.0) + dur
         return (fn() if fn is not None else None), end
 
+    def compute_batch_at(self, items, *, tag="decode", at: float = 0.0):
+        """One batched accelerator occupation for several requests' ops.
+
+        `items` is a list of (fn, flops, hbm_bytes, weight_bytes) — vLLM-style
+        token batching: FLOPs and per-request memory traffic add up, but the
+        weight stream (`weight_bytes`, included in each op's `hbm_bytes`) is
+        paid once for the whole batch.  A single-item batch is priced exactly
+        like `compute_at`, so batching degenerates to the serial timeline at
+        concurrency 1.  Returns ([result, ...], end_time).
+        """
+        flops = sum(it[1] for it in items)
+        weight = max((it[3] for it in items), default=0.0)
+        hbm = weight + sum(it[2] - it[3] for it in items)
+        dur = self.model.compute_time(flops, hbm)
+        label = f"compute:{tag}" + (f"[x{len(items)}]" if len(items) > 1 else "")
+        end = self._occupy("compute", dur, label, at)
+        self.stage_times[tag] = self.stage_times.get(tag, 0.0) + dur
+        return [(it[0]() if it[0] is not None else None) for it in items], end
+
 
 class SimExecutor(ChannelSim):
     """Single-request wrapper over :class:`ChannelSim` (legacy serial API).

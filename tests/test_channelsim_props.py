@@ -1,0 +1,102 @@
+"""Property-based invariants of the ChannelSim discrete-event core.
+
+Random op sequences over the three FIFO channels must preserve, per channel:
+  monotonicity  — completion times non-decreasing in submission order;
+  no overlap    — occupancies never intersect;
+  conservation  — accumulated busy time == summed op durations.
+Runs with real hypothesis when installed, else the deterministic fallback in
+tests/_hypothesis_compat.py.
+"""
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.storage.timing import ChannelSim, DeviceModel
+
+CHANNELS = ("ssd", "pcie", "compute")
+
+op_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(CHANNELS),
+        st.floats(0.0, 5.0),  # earliest-start (requests' own clocks)
+        st.integers(1, 1 << 22),  # nbytes (io) / MFLOP scale (compute)
+        st.integers(1, 64),  # n_requests (io) / batch width unused
+    ),
+    min_size=1,
+    max_size=50,
+)
+
+
+def _drive(ops):
+    """Submit `ops` in order; return (sim, per-channel completion times)."""
+    sim = ChannelSim(DeviceModel())
+    completions = {ch: [] for ch in CHANNELS}
+    for ch, at, size, n_req in ops:
+        if ch == "compute":
+            _, end = sim.compute_at(None, flops=size * 1e6,
+                                    hbm_bytes=size, tag="prop", at=at)
+        else:
+            h = sim.submit_io_at(None, nbytes=size, n_requests=n_req,
+                                 channel=ch, at=at)
+            end = h.ready_at
+        completions[ch].append(end)
+    return sim, completions
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy)
+def test_fifo_completions_monotonic(ops):
+    _, completions = _drive(ops)
+    for ch, ends in completions.items():
+        assert all(b >= a for a, b in zip(ends, ends[1:])), (
+            f"{ch}: completion times regressed: {ends}")
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy)
+def test_no_occupancy_overlap_per_channel(ops):
+    sim, _ = _drive(ops)
+    for ch in CHANNELS:
+        evs = [(s, e) for s, e, res, _ in sim.events if res == ch]
+        # events are appended in occupancy order on a FIFO channel
+        for (s0, e0), (s1, e1) in zip(evs, evs[1:]):
+            assert s1 >= e0 - 1e-12, (
+                f"{ch}: occupancy [{s1}, {e1}] overlaps [{s0}, {e0}]")
+            assert e0 >= s0 and e1 >= s1
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy)
+def test_busy_time_conserved(ops):
+    sim, _ = _drive(ops)
+    model = sim.model
+    expect = {ch: 0.0 for ch in CHANNELS}
+    for ch, at, size, n_req in ops:
+        if ch == "compute":
+            expect[ch] += model.compute_time(size * 1e6, size)
+        else:
+            expect[ch] += sim.io_duration(size, n_req, ch)
+    for ch in CHANNELS:
+        event_busy = sum(e - s for s, e, res, _ in sim.events if res == ch)
+        assert sim.busy[ch] == pytest.approx(expect[ch], rel=1e-12)
+        assert event_busy == pytest.approx(expect[ch], rel=1e-12)
+
+
+def test_batched_compute_occupies_once_and_prices_shared_weights():
+    """compute_batch_at: one occupancy; weights paid once, KV summed; a
+    single-item batch is priced exactly like compute_at."""
+    model = DeviceModel()
+    sim = ChannelSim(model)
+    items = [(None, 1e9, 5e6, 4e6), (None, 2e9, 6e6, 4e6), (None, 3e9, 7e6, 4e6)]
+    _, end = sim.compute_batch_at(items, tag="decode", at=0.0)
+    assert len(sim.events) == 1
+    expected = model.compute_time(6e9, 4e6 + (1e6 + 2e6 + 3e6))
+    assert end == pytest.approx(expected, rel=1e-12)
+
+    solo = ChannelSim(model)
+    _, end_b = solo.compute_batch_at([(None, 1e9, 5e6, 4e6)], at=0.0)
+    ref = ChannelSim(model)
+    _, end_c = ref.compute_at(None, flops=1e9, hbm_bytes=5e6, tag="decode", at=0.0)
+    assert end_b == end_c
+    assert solo.events[0] == ref.events[0]

@@ -1,0 +1,161 @@
+"""Decode-phase plans: costmodel pricing, cache dynamics, continuous batching."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ContiguousKVEngine, SyntheticWorkload, build_sim_session
+from repro.core import costmodel as CM
+from repro.core.backends import SimCompute
+from repro.core.stepplan import ComputeOp, WaitOp, drive_serial
+from repro.serving import Request, Scheduler, SLOAwarePolicy, summarize
+from repro.serving.tenancy import build_sim_fleet
+from repro.storage.timing import ChannelSim, DeviceModel, SimExecutor
+
+MODEL = "qwen2.5-7b"
+PREFIX = 1024
+SUFFIX = 64
+N_DEC = 4
+
+
+def _engine(executor, device_cap=100, host_cap=400):
+    cfg = get_config(MODEL)
+    wl = SyntheticWorkload(PREFIX, cfg.n_layers, seed=1)
+    sess = build_sim_session(cfg, PREFIX)
+    return ContiguousKVEngine(sess, SimCompute(cfg, wl), executor,
+                              budget=0.25, device_cap=device_cap,
+                              host_cap=host_cap)
+
+
+class TestDecodePlan:
+    def test_decode_zero_is_a_noop(self):
+        a = _engine(SimExecutor(DeviceModel()))
+        b = _engine(SimExecutor(DeviceModel()))
+        _, tr0 = a.reprefill(np.zeros(SUFFIX, np.int64), request_id=0)
+        _, tr1 = b.reprefill(np.zeros(SUFFIX, np.int64), request_id=0,
+                             decode_tokens=0)
+        assert tr0.ttft == tr1.ttft
+        assert tr1.decode_times == []
+        assert tr1.tpot == 0.0
+
+    def test_decode_emits_one_compute_op_per_token(self):
+        eng = _engine(ChannelSim(DeviceModel()))
+        plan = eng.plan(np.zeros(SUFFIX, np.int64), request_id=0,
+                        decode_tokens=N_DEC)
+        decode_ops, send = [], None
+        gen = plan.gen
+        try:
+            while True:
+                op = gen.send(send)
+                if isinstance(op, ComputeOp):
+                    if op.phase == "decode":
+                        decode_ops.append(op)
+                    send = op.fn() if op.fn is not None else None
+                else:
+                    assert isinstance(op, WaitOp)
+                    plan.clock.t = max(plan.clock.t, op.handle.ready_at)
+                    send = op.handle.result
+        except StopIteration:
+            pass
+        assert len(decode_ops) == N_DEC
+        for op in decode_ops:
+            assert op.tag == "decode"
+            assert 0 < op.weight_bytes <= op.hbm_bytes
+
+    def test_decode_steps_priced_through_costmodel(self):
+        """Each decode ComputeOp's flops/hbm == decode_step_cost of the
+        per-token selection recorded in the trace."""
+        cfg = get_config(MODEL)
+        eng = _engine(SimExecutor(DeviceModel()))
+        _, tr = eng.reprefill(np.zeros(SUFFIX, np.int64), request_id=0,
+                              decode_tokens=N_DEC)
+        layout = eng.session.store.layout
+        # reconstruct expected pricing and check against the sim timeline:
+        # decode compute stage time must equal the costmodel durations
+        model = eng.ex.model
+        expect = 0.0
+        for step, sel in enumerate(tr.decode_selected):
+            attended = [len(sel) * layout.unit_tokens + SUFFIX + step + 1
+                        ] * cfg.n_layers
+            cost = CM.decode_step_cost(cfg, attended)
+            expect += model.compute_time(cost.flops, cost.hbm_bytes)
+        assert eng.ex.stage_times["decode"] == pytest.approx(expect, rel=1e-12)
+        assert len(tr.decode_times) == N_DEC
+        assert tr.first_token_at > 0
+        assert all(b > a for a, b in
+                   zip([tr.first_token_at] + tr.decode_times, tr.decode_times))
+
+    def test_decode_misses_turn_into_demand_fetches(self):
+        """Tiny device cache: decode-time selection drift must demand-fetch."""
+        eng = _engine(SimExecutor(DeviceModel()), device_cap=8, host_cap=16)
+        _, tr_warm = eng.reprefill(np.zeros(SUFFIX, np.int64), request_id=0)
+        eng2 = _engine(SimExecutor(DeviceModel()), device_cap=8, host_cap=16)
+        _, tr = eng2.reprefill(np.zeros(SUFFIX, np.int64), request_id=0,
+                               decode_tokens=N_DEC)
+        assert tr.misses > tr_warm.misses
+        assert tr.stages.get("decode_io", 0.0) > 0.0
+
+    def test_decode_updates_attention_guided_cache(self):
+        eng = _engine(SimExecutor(DeviceModel()))
+        eng.reprefill(np.zeros(SUFFIX, np.int64), request_id=0)
+        i_before = dict(eng.cache.I)
+        eng2 = _engine(SimExecutor(DeviceModel()))
+        eng2.reprefill(np.zeros(SUFFIX, np.int64), request_id=0,
+                       decode_tokens=N_DEC)
+        grew = [k for k in eng2.cache.I
+                if eng2.cache.I[k] > i_before.get(k, 0.0)]
+        assert grew, "decode-time scores must keep feeding Eq. 2"
+
+
+class TestContinuousBatching:
+    def _run(self, batch_decode, n_req=6, decode_tokens=12, conc=4):
+        fleet = build_sim_fleet("contiguous_kv", MODEL, n_tenants=1,
+                                prefix_len=PREFIX, device_cap=100,
+                                host_cap=400)
+        reqs = [Request(request_id=i, suffix=np.zeros(SUFFIX, np.int64),
+                        arrival=0.0, tenant=1, decode_tokens=decode_tokens)
+                for i in range(n_req)]
+        sched = Scheduler(fleet.engines, max_concurrency=conc,
+                          batch_decode=batch_decode)
+        return summarize(sched.run(reqs)), fleet.executor
+
+    def test_batched_beats_unbatched_at_concurrency_4(self):
+        s_b, ex_b = self._run(True)
+        s_u, ex_u = self._run(False)
+        assert s_b["makespan"] < s_u["makespan"]
+        assert s_b["decode_tokens"] == s_u["decode_tokens"]
+        # batches actually formed: multi-member occupations in the timeline
+        assert any("[x" in tag for _, _, _, tag in ex_b.events)
+        assert not any("[x" in tag for _, _, _, tag in ex_u.events)
+
+    def test_summary_reports_decode_metrics(self):
+        s, _ = self._run(True)
+        for key in ("mean_tpot", "p50_itl", "p95_itl", "decode_tok_rate"):
+            assert key in s and s[key] > 0
+
+
+class TestSLOAwarePolicy:
+    def test_earliest_deadline_first(self):
+        policy = SLOAwarePolicy()
+        queued = [
+            Request(request_id=0, suffix=np.zeros(4), arrival=0.0),  # no SLO
+            Request(request_id=1, suffix=np.zeros(4), arrival=0.0,
+                    ttft_target=2.0),
+            Request(request_id=2, suffix=np.zeros(4), arrival=0.5,
+                    ttft_target=0.5),
+        ]
+        assert policy.select(queued, {}).request_id == 2
+        # without targets, falls back to FCFS
+        no_slo = [Request(request_id=5, suffix=np.zeros(4), arrival=1.0),
+                  Request(request_id=4, suffix=np.zeros(4), arrival=0.2)]
+        assert policy.select(no_slo, {}).request_id == 4
+
+    def test_slo_attainment_in_summary(self):
+        fleet = build_sim_fleet("contiguous_kv", MODEL, n_tenants=1,
+                                prefix_len=PREFIX, device_cap=100,
+                                host_cap=400)
+        reqs = [Request(request_id=i, suffix=np.zeros(SUFFIX, np.int64),
+                        arrival=0.0, tenant=1, ttft_target=1e3)
+                for i in range(2)]
+        s = summarize(Scheduler(fleet.engines, policy="slo_aware",
+                                max_concurrency=2).run(reqs))
+        assert s["slo_attainment"] == 1.0

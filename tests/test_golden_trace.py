@@ -1,0 +1,67 @@
+"""Golden-trace regression: the ContiguousKV sim timeline is pinned exactly.
+
+A small serving scenario (2 requests, concurrency 2, 2 decode tokens each)
+is run through the Scheduler over ChannelSim and every channel occupancy
+(start, end, resource, tag) is compared — to the nanosecond — against a
+committed fixture.  Scheduler or discrete-event refactors that shift the
+timeline in any way fail loudly instead of silently re-basing the model.
+
+Regenerate (after an *intentional* timing-model change) with:
+
+    GOLDEN_REGEN=1 PYTHONPATH=src python -m pytest tests/test_golden_trace.py
+"""
+import json
+import os
+import pathlib
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ContiguousKVEngine, SyntheticWorkload, build_sim_session
+from repro.core.backends import SimCompute
+from repro.serving import Request, Scheduler
+from repro.storage.timing import ChannelSim, DeviceModel
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "ckv_sim_timeline.json"
+
+MODEL = "qwen2.5-7b"
+PREFIX = 512
+N_REQ = 2
+DECODE = 2
+ROUND = 9  # ns resolution at the sim's seconds scale
+
+
+def _run_scenario():
+    cfg = get_config(MODEL)
+    wl = SyntheticWorkload(PREFIX, cfg.n_layers, seed=3)
+    sess = build_sim_session(cfg, PREFIX)
+    ex = ChannelSim(DeviceModel())
+    eng = ContiguousKVEngine(sess, SimCompute(cfg, wl), ex,
+                             budget=0.25, device_cap=64, host_cap=128)
+    reqs = [Request(request_id=rid, suffix=np.zeros(32, np.int64) + rid,
+                    arrival=0.0, decode_tokens=DECODE)
+            for rid in range(N_REQ)]
+    done = Scheduler(eng, max_concurrency=2).run(reqs)
+    events = [[round(s, ROUND), round(e, ROUND), res, tag]
+              for s, e, res, tag in ex.events]
+    ttfts = {str(c.request.request_id): round(c.trace.ttft, ROUND)
+             for c in done}
+    finishes = {str(c.request.request_id): round(c.finish, ROUND)
+                for c in done}
+    return {"model": MODEL, "prefix": PREFIX, "decode_tokens": DECODE,
+            "events": events, "ttft": ttfts, "finish": finishes}
+
+
+def test_sim_timeline_matches_golden_fixture():
+    got = _run_scenario()
+    if os.environ.get("GOLDEN_REGEN"):
+        GOLDEN.parent.mkdir(exist_ok=True)
+        GOLDEN.write_text(json.dumps(got, indent=None, separators=(",", ":"))
+                          + "\n")
+    want = json.loads(GOLDEN.read_text())
+    assert got["ttft"] == want["ttft"]
+    assert got["finish"] == want["finish"]
+    assert len(got["events"]) == len(want["events"]), (
+        f"event count drifted: {len(got['events'])} vs {len(want['events'])}")
+    for i, (g, w) in enumerate(zip(got["events"], want["events"])):
+        assert g == w, f"event {i} drifted: {g} != {w}"

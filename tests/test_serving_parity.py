@@ -1,0 +1,100 @@
+"""Engine-parity matrix: Scheduler(max_concurrency=1) == drive_serial.
+
+For every engine (ContiguousKV + the three baselines) and every admission
+policy, driving requests one at a time through the scheduler must reproduce
+the legacy serial wrapper bit-for-bit: stage times, read amplification and
+TTFT are compared exactly, not approximately.  This pins the discrete-event
+model across scheduler refactors (continuous batching must degenerate to
+the serial timeline at concurrency 1).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SyntheticWorkload, build_sim_session
+from repro.core.backends import SimCompute
+from repro.serving import POLICIES, Request, Scheduler
+from repro.serving.tenancy import ENGINE_CLASSES
+from repro.storage.timing import ChannelSim, DeviceModel, SimExecutor
+
+MODEL = "qwen2.5-7b"
+PREFIX = 2048
+N_REQ = 3
+
+SYSTEMS = list(ENGINE_CLASSES)
+
+
+def _suffix(rid):
+    return np.zeros(48, np.int64) + rid % 5
+
+
+def _engine(system: str, executor):
+    cfg = get_config(MODEL)
+    wl = SyntheticWorkload(PREFIX, cfg.n_layers, seed=2)
+    coarse = system != "contiguous_kv"
+    sess = build_sim_session(cfg, PREFIX, coarse_blocks=coarse)
+    cls = ENGINE_CLASSES[system]
+    kw = dict(device_cap=200, host_cap=800)
+    if system == "contiguous_kv":
+        kw.update(budget=0.25, period=8, subperiod=4)
+    elif system != "as_lru":
+        kw.update(budget=0.25)
+    return cls(sess, SimCompute(cfg, wl), executor, **kw)
+
+
+@pytest.fixture(scope="module")
+def serial_traces():
+    """system -> list of serial reference traces (fresh engine per system)."""
+    out = {}
+    for system in SYSTEMS:
+        eng = _engine(system, SimExecutor(DeviceModel()))
+        traces = []
+        for rid in range(N_REQ):
+            _, tr = eng.reprefill(_suffix(rid), request_id=rid)
+            traces.append(tr)
+        out[system] = traces
+    return out
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_concurrency_one_bit_identical_to_serial(system, policy, serial_traces):
+    eng = _engine(system, ChannelSim(DeviceModel()))
+    sched = Scheduler(eng, policy=policy, max_concurrency=1)
+    reqs = [Request(request_id=rid, suffix=_suffix(rid), arrival=0.0)
+            for rid in range(N_REQ)]
+    done = sched.run(reqs)
+    assert [c.request.request_id for c in done] == list(range(N_REQ))
+    for rid, c in enumerate(done):
+        ref = serial_traces[system][rid]
+        got = c.trace
+        assert got.ttft == ref.ttft, f"{system}/{policy} req {rid} ttft"
+        assert got.stages == ref.stages, f"{system}/{policy} req {rid} stages"
+        assert got.read_amplification == ref.read_amplification
+        assert (got.ssd_bytes, got.ssd_requests, got.pcie_bytes) == (
+            ref.ssd_bytes, ref.ssd_requests, ref.pcie_bytes)
+        assert (got.hits_device, got.hits_host, got.misses) == (
+            ref.hits_device, ref.hits_host, ref.misses)
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_concurrency_one_with_decode_prices_like_serial(system, serial_traces):
+    """decode_tokens > 0 at concurrency 1: the batched path degenerates to
+    the serial decode timeline (single-member batches)."""
+    serial_eng = _engine(system, SimExecutor(DeviceModel()))
+    ref_traces = []
+    for rid in range(2):
+        _, tr = serial_eng.reprefill(_suffix(rid), request_id=rid,
+                                     decode_tokens=3)
+        ref_traces.append(tr)
+
+    eng = _engine(system, ChannelSim(DeviceModel()))
+    sched = Scheduler(eng, max_concurrency=1)
+    reqs = [Request(request_id=rid, suffix=_suffix(rid), arrival=0.0,
+                    decode_tokens=3) for rid in range(2)]
+    done = sched.run(reqs)
+    for rid, c in enumerate(done):
+        ref = ref_traces[rid]
+        assert c.trace.decode_times == ref.decode_times
+        assert c.trace.stages == ref.stages
+        assert c.trace.ttft == ref.ttft
