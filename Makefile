@@ -3,21 +3,37 @@
 # Note: the sharding tests (tests/test_shard*.py) are known to fail on
 # single-device containers; run `make verify-core` for the gate that must
 # stay green everywhere.
+#
+# CI splits the gate in two (see .github/workflows/ci.yml):
+#   verify-core-tests — everything except the serving-regression suite;
+#   verify-serving    — parity + property + golden tests and the serving
+#                       throughput benchmark with its decode/mixed gates.
 
 PY := python
 export PYTHONPATH := src
 
-.PHONY: verify verify-core test bench-throughput
+SERVING_TESTS := tests/test_serving.py tests/test_serving_parity.py \
+	tests/test_channelsim_props.py tests/test_mixed_batch_props.py \
+	tests/test_golden_trace.py tests/test_decode.py
+
+.PHONY: verify verify-core verify-core-tests verify-serving test bench-throughput
 
 verify: test bench-throughput
 
 test:
 	$(PY) -m pytest -x -q
 
-verify-core:
-	$(PY) -m pytest -q --deselect tests/test_sharded_sparse.py \
+verify-core: verify-core-tests verify-serving
+
+verify-core-tests:
+	$(PY) -m pytest -q --durations=15 \
+		--deselect tests/test_sharded_sparse.py \
 		--deselect tests/test_sharding_small.py \
-		--deselect tests/test_checkpoint.py::TestCheckpoint::test_elastic_restore_onto_different_mesh
+		--deselect tests/test_checkpoint.py::TestCheckpoint::test_elastic_restore_onto_different_mesh \
+		$(addprefix --ignore=,$(SERVING_TESTS))
+
+verify-serving:
+	$(PY) -m pytest -q --durations=15 $(SERVING_TESTS)
 	$(PY) benchmarks/bench_throughput.py --quick
 
 bench-throughput:

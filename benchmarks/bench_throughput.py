@@ -12,6 +12,12 @@ mean TPOT, inter-token P95, decode token throughput, and the makespan
 speedup of the scheduler's continuous batching over unbatched decode at
 concurrency 4 (gated: batched must win).
 
+A mixed-phase section staggers prefill arrivals into a decode-heavy stream
+and compares chunked prefill mixing (``prefill_chunk_tokens``) against
+unchunked batching at c4 (gated: chunking must cut ContiguousKV's P95
+TTFT), then drives an SLO scenario with preemption + swap enabled and
+reports preemption/swap counts (gated: at least one preemption fires).
+
 Standalone: ``PYTHONPATH=src python benchmarks/bench_throughput.py --quick``
 or through the harness: ``python -m benchmarks.run --only serving``.
 """
@@ -37,11 +43,13 @@ from repro.serving import Request, Scheduler, poisson_arrivals, summarize
 from repro.serving.tenancy import build_sim_fleet
 
 
-def _fleet(system: str, model: str, prefix_len: int, budget: float, seed: int):
+def _fleet(system: str, model: str, prefix_len: int, budget: float, seed: int,
+           prefill_chunk_tokens=None):
     fleet = build_sim_fleet(system, model, n_tenants=1, prefix_len=prefix_len,
                             budget=budget if system != "as_lru" else 1.0,
                             device_model=PAPER_DEVICE, seed=seed,
-                            device_cap=1, host_cap=1)
+                            device_cap=1, host_cap=1,
+                            prefill_chunk_tokens=prefill_chunk_tokens)
     # byte-fair cache capacities, as in benchmarks.common._caps_from_layout
     layout = next(iter(fleet.engines.values())).session.store.layout
     cache = fleet.cache
@@ -140,6 +148,88 @@ def run(quick: bool = False):
         f"batched decode makespan not below unbatched at c{conc}: "
         f"{makespans['contiguous_kv', True]:.4f}s vs "
         f"{makespans['contiguous_kv', False]:.4f}s")
+
+    # -- mixed phase: chunked prefill inside the decode iteration ------------
+    # long re-prefills (1k-token suffixes) staggered into a decode-heavy
+    # stream: the suffix compute is flops-bound while decode iterations are
+    # weight-bound, so chunk ops riding a decode iteration execute under its
+    # memory-bound duration for free ("compute or load — why not both")
+    # instead of serializing their own occupations behind it
+    mix_dec = 48
+    mix_suffix = 1024
+    mix_chunk = 128
+    n_mix = 8 if quick else 12
+    gap = (4.0 if quick else 6.0) * t_ref
+    p95_mix = {}
+    for chunk in (None, mix_chunk):
+        fleet = _fleet("contiguous_kv", model, prefix_len, budget, seed=0,
+                       prefill_chunk_tokens=chunk)
+        sched = Scheduler(fleet.engines, policy="fcfs", max_concurrency=conc,
+                          max_batch_tokens=2048)
+        reqs = [Request(request_id=i,
+                        suffix=rng_suffix.integers(0, 1000, mix_suffix),
+                        arrival=i * gap, tenant=1, decode_tokens=mix_dec)
+                for i in range(n_mix)]
+        s = summarize(sched.run(reqs))
+        p95_mix[chunk] = s["p95_ttft"]
+        label = f"chunked{mix_chunk}" if chunk else "unchunked"
+        tag = f"serving/contiguous_kv/mixed{mix_dec}/c{conc}/{label}"
+        rows += [
+            (f"{tag}/p95_ttft_ms", s["p95_ttft"] * 1e3, "ms"),
+            (f"{tag}/p50_ttft_ms", s["p50_ttft"] * 1e3, "ms"),
+            (f"{tag}/p95_itl_ms", s["p95_itl"] * 1e3, "ms"),
+            (f"{tag}/makespan_s", s["makespan"], "s"),
+        ]
+    rows.append((f"serving/contiguous_kv/mixed{mix_dec}/c{conc}"
+                 f"/chunked_p95_ttft_speedup",
+                 p95_mix[None] / p95_mix[mix_chunk], "x"))
+    assert p95_mix[mix_chunk] < p95_mix[None], (
+        f"chunked prefill mixing did not cut P95 TTFT at c{conc}: "
+        f"{p95_mix[mix_chunk]:.4f}s vs {p95_mix[None]:.4f}s unchunked")
+
+    # -- SLO pressure: preemption + swap of decode plans ---------------------
+    # slots full of long best-effort decodes; urgent short-SLO requests
+    # arrive mid-decode and must preempt to make their deadlines.  The
+    # prefill estimate is seeded with the *contended* service time (what
+    # the EWMA converges to under this load), so the projection fires at
+    # the urgent request's arrival rather than when the slack is gone.
+    n_bg = conc
+    bg_dec = 40 if quick else 80
+    urgent_t = 3.0 * t_ref
+    urgent_slo = 12.0 * t_ref
+    results = {}
+    for preempt in (False, True):
+        fleet = _fleet("contiguous_kv", model, prefix_len, budget, seed=0,
+                       prefill_chunk_tokens=32)
+        sched = Scheduler(fleet.engines, policy="slo_aware",
+                          max_concurrency=conc, max_batch_tokens=512,
+                          preempt=preempt, swap_on_preempt=True,
+                          prefill_estimate=urgent_slo)
+        reqs = [Request(request_id=i, suffix=rng_suffix.integers(0, 1000, 64),
+                        arrival=0.0, tenant=1, decode_tokens=bg_dec)
+                for i in range(n_bg)]
+        reqs += [Request(request_id=n_bg + i,
+                         suffix=rng_suffix.integers(0, 1000, 64),
+                         arrival=urgent_t + i * t_ref, tenant=1,
+                         decode_tokens=0, ttft_target=urgent_slo)
+                 for i in range(2)]
+        s = summarize(sched.run(reqs))
+        results[preempt] = (s, sched)
+    s_p, sched_p = results[True]
+    s_np, _ = results[False]
+    tag = f"serving/contiguous_kv/preempt/c{conc}"
+    rows += [
+        (f"{tag}/preemptions", s_p["preemptions"], "count"),
+        (f"{tag}/swaps", s_p["swaps"], "count"),
+        (f"{tag}/swap_bytes_mb", sched_p.swap_bytes / 1e6, "MB"),
+        (f"{tag}/slo_attainment", s_p.get("slo_attainment", 0.0), "frac"),
+        (f"{tag}/slo_attainment_no_preempt",
+         s_np.get("slo_attainment", 0.0), "frac"),
+    ]
+    assert s_p["preemptions"] >= 1, "SLO pressure scenario never preempted"
+    assert (s_p.get("slo_attainment", 0.0)
+            > s_np.get("slo_attainment", 0.0)), (
+        "preemption did not improve SLO attainment under pressure")
     return rows
 
 
@@ -152,7 +242,8 @@ def main():
     for name, val, derived in rows:
         print(f"{name},{val:.6g},{derived}")
     print("# gate ok: contiguous_kv p95 < impress at every offered load; "
-          "batched decode beats unbatched at c4")
+          "batched decode beats unbatched at c4; chunked prefill mixing "
+          "cuts p95 TTFT at c4; SLO pressure preempts")
 
 
 if __name__ == "__main__":

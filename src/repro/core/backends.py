@@ -141,22 +141,14 @@ class RealCompute:
         table = jnp.arange(n_pages, dtype=jnp.int32)[None]
         lengths = jnp.array([n_res * page + t_tail], jnp.int32)
         q1 = q[:, 0]  # (1, n_q, d) — single decode position
-        out = decode_attention(q1, k_pool, v_pool, table, lengths)
+        out, page_mass = decode_attention(q1, k_pool, v_pool, table, lengths)
         attn = out.reshape(1, 1, cfg.n_heads, d)
         o = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"])
         h = h + o
         h = _ffn(h, lp, cfg, dropless=True)
-        # per-resident-page attention mass (decode-time cache scores)
-        group = cfg.n_heads // cfg.n_kv_heads
-        qg = q1.reshape(1, cfg.n_kv_heads, group, d).astype(jnp.float32)
-        flat_k = k_pool.reshape(1, n_pages * page, cfg.n_kv_heads, d)
-        logits = jnp.einsum("bngd,btnd->bngt", qg,
-                            flat_k.astype(jnp.float32)) * d ** -0.5
-        pos = jnp.arange(n_pages * page)
-        logits = jnp.where(pos[None, None, None, :] < lengths[0], logits, -1e30)
-        p = jax.nn.softmax(logits, axis=-1)
-        mass = p[..., : n_res * page].reshape(1, cfg.n_kv_heads, group, n_res, page)
-        mass = mass.sum(axis=(-1,)).mean(axis=(0, 1, 2))  # (n_res,)
+        # per-resident-page attention mass (decode-time cache scores) comes
+        # straight from the kernel's online softmax — no second score pass
+        mass = page_mass[0].mean(axis=0)[:n_res]  # head-avg, resident pages
         return h, np.asarray(mass)
 
 

@@ -61,6 +61,24 @@ def token_kv_bytes(cfg: ModelConfig) -> int:
     return 2 * cfg.kv_dim * 2
 
 
+def prefill_chunk_cost(cfg: ModelConfig, chunk_len: int,
+                       attended_tokens: int) -> LayerCost:
+    """One prefill chunk of ``chunk_len`` suffix tokens through one layer's
+    part-B (attention over the attended set + out-proj + FFN).
+
+    FLOPs are the chunk's linear share of the monolithic op (projections,
+    attention and FFN all scale with the token count, so the chunks sum
+    exactly to the unchunked FLOPs), but HBM traffic is *not* linear: every
+    chunk re-streams the layer weights and re-reads the whole attended KV,
+    which is the real cost of chunked prefill.  The weight slice is the
+    batch-shared part — a mixed batch iteration pays it once
+    (``layer_weight_bytes``), so chunks riding a decode iteration add only
+    their KV traffic."""
+    lc = suffix_layer_cost(cfg, chunk_len, attended_tokens)
+    part_a = 2.0 * chunk_len * cfg.d_model * (cfg.attn_dim + 2 * cfg.kv_dim)
+    return LayerCost(flops=float(lc.flops - part_a), hbm_bytes=lc.hbm_bytes)
+
+
 def decode_layer_cost(cfg: ModelConfig, attended_tokens: int) -> LayerCost:
     """One decode position through one layer: the suffix cost at s=1."""
     return suffix_layer_cost(cfg, 1, attended_tokens)

@@ -155,6 +155,7 @@ class _EngineBase:
         cache: CachePolicy,
         *,
         budget: float = 0.25,
+        prefill_chunk_tokens: Optional[int] = None,
         suffix_flops_attended=None,
     ):
         self.session = session
@@ -162,6 +163,12 @@ class _EngineBase:
         self.ex = executor
         self.cache = cache
         self.budget = budget
+        # chunk-granular prefill: split each layer's suffix compute into
+        # resumable chunks of this many tokens so the serving scheduler can
+        # mix them with other plans' decode tokens. None (or >= suffix len)
+        # keeps the monolithic per-layer op — bit-identical to the
+        # pre-chunking plans.
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         self.cfg = session.cfg
         self.sim = isinstance(executor, ChannelSim)
         self.tenant = session.tenant
@@ -364,6 +371,38 @@ class _EngineBase:
         a = self._cost_part_a(suffix_len)
         return lc.flops - a, lc.hbm_bytes
 
+    def _part_b_ops(self, fn, suffix_len: int, attended: int, layer: int,
+                    tag: str = "compute"):
+        """Yield one layer's part-B suffix compute, chunk-granular on demand.
+
+        With ``prefill_chunk_tokens`` unset or >= the suffix length this is
+        exactly the legacy monolithic ComputeOp (the serving parity matrix
+        pins that).  Otherwise the suffix splits into ceil(s/c) resumable
+        chunks, each priced by :func:`costmodel.prefill_chunk_cost` and
+        stamped with ``tokens``/``weight_bytes`` so the scheduler's
+        token-budgeted batch former can coalesce it with other plans' decode
+        tokens (the weight stream is then paid once per iteration).  Only
+        the final chunk runs ``fn`` — earlier chunks are pure occupancy, so
+        real-mode results are unaffected.  Returns the final op's value."""
+        c = self.prefill_chunk_tokens
+        if not c or c >= suffix_len:
+            fl, hb = self._cost_part_b(suffix_len, attended)
+            out = yield ComputeOp(fn, flops=fl, hbm_bytes=hb, tag=tag)
+            return out
+        wb = float(CM.layer_weight_bytes(self.cfg))
+        out = None
+        done = 0
+        while done < suffix_len:
+            n_tok = min(c, suffix_len - done)
+            done += n_tok
+            cost = CM.prefill_chunk_cost(self.cfg, n_tok, attended)
+            out = yield ComputeOp(fn if done >= suffix_len else None,
+                                  flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                                  tag=tag, phase="prefill", tokens=n_tok,
+                                  weight_bytes=wb,
+                                  weight_key=f"layer:{layer}")
+        return out
+
     # -- gather ----------------------------------------------------------------
     def _gather_chunks(self, layer: int, units: np.ndarray, chunk_tokens: int):
         """-> (k_sel, v_sel, valid) bucket-padded; sim mode returns Nones."""
@@ -476,7 +515,8 @@ class _EngineBase:
             out = yield ComputeOp(self._bound(request_id, fn) if fn else None,
                                   flops=cost.flops, hbm_bytes=cost.hbm_bytes,
                                   tag="decode", phase="decode",
-                                  weight_bytes=weight_bytes)
+                                  weight_bytes=weight_bytes, tokens=1,
+                                  weight_key="model")
             masses = None
             if out is not None:
                 logits, masses = out
@@ -502,9 +542,11 @@ class ContiguousKVEngine(_EngineBase):
 
     def __init__(self, session, backend, executor, cache=None, *, budget=0.25,
                  period: int = 8, subperiod: int = 4, prefetch: bool = True,
-                 inter_period: bool = True, device_cap: int = 0, host_cap: int = 0):
+                 inter_period: bool = True, device_cap: int = 0, host_cap: int = 0,
+                 prefill_chunk_tokens: Optional[int] = None):
         cache = cache if cache is not None else AttentionGuidedCache(device_cap, host_cap)
-        super().__init__(session, backend, executor, cache, budget=budget)
+        super().__init__(session, backend, executor, cache, budget=budget,
+                         prefill_chunk_tokens=prefill_chunk_tokens)
         self.schedule = PeriodSchedule(self.cfg.n_layers, period, subperiod)
         self.prefetch = prefetch
         self.inter_period = inter_period and prefetch
@@ -582,13 +624,12 @@ class ContiguousKVEngine(_EngineBase):
                 k_sel, v_sel, valid = self._gather_chunks(l, selected, meta.chunk_tokens)
                 if keep_suffix_kv:
                     kv_suffix[l] = (k_suf, v_suf)
-                fl, hb = self._cost_part_b(s, n_attended)
-                h, mass = yield ComputeOp(
+                h, mass = yield from self._part_b_ops(
                     self._bound(request_id,
                                 lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
                                        k1=k_sel, v1=v_sel, vd=valid: be.part_b(
                                     ll, hh, b, c1, c2, k1, v1, vd, meta.chunk_tokens)),
-                    flops=fl, hbm_bytes=hb, tag="compute")
+                    s, n_attended, l)
                 # attention-guided cache updates (Eq. 1/2)
                 if isinstance(self.cache, AttentionGuidedCache) and mass is not None:
                     for i, u in enumerate(selected):
@@ -675,13 +716,12 @@ class _BlockBaselineEngine(_EngineBase):
             resident[l] = np.asarray(blocks, dtype=int)
             if keep_suffix_kv:
                 kv_suffix[l] = (k_suf, v_suf)
-            fl, hb = self._cost_part_b(s, n_attended)
-            h, mass = yield ComputeOp(
+            h, mass = yield from self._part_b_ops(
                 self._bound(request_id,
                             lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
                                    k1=k_sel, v1=v_sel, vd=valid: be.part_b(
                                 ll, hh, b, c1, c2, k1, v1, vd, 1)),
-                flops=fl, hbm_bytes=hb, tag="compute")
+                s, n_attended, l)
             if isinstance(self.cache, ImpressScoreCache):
                 # static importance: fraction of selected tokens in each block
                 for blk in blocks:
@@ -725,10 +765,12 @@ class ASLRUEngine(_BlockBaselineEngine):
     name = "as_lru"
     select_tokens = False
 
-    def __init__(self, session, backend, executor, *, device_cap=0, host_cap=0):
+    def __init__(self, session, backend, executor, *, device_cap=0, host_cap=0,
+                 prefill_chunk_tokens: Optional[int] = None):
         # Full-prefix streaming: the budget is 1.0 by construction.
         super().__init__(session, backend, executor,
-                         LRUCache(device_cap, host_cap), budget=1.0)
+                         LRUCache(device_cap, host_cap), budget=1.0,
+                         prefill_chunk_tokens=prefill_chunk_tokens)
 
     def _gather_tokens(self, layer, tokens, blocks):
         """Full-prefix attention: gather whole blocks as chunk units."""
@@ -773,13 +815,12 @@ class ASLRUEngine(_BlockBaselineEngine):
             k_sel, v_sel, valid = self._gather_tokens(l, None, blocks)
             if keep_suffix_kv:
                 kv_suffix[l] = (k_suf, v_suf)
-            fl, hb = self._cost_part_b(s, n_attended)
-            h, _ = yield ComputeOp(
+            h, _ = yield from self._part_b_ops(
                 self._bound(request_id,
                             lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
                                    k1=k_sel, v1=v_sel, vd=valid: be.part_b(
                                 ll, hh, b, c1, c2, k1, v1, vd, layout.unit_tokens)),
-                flops=fl, hbm_bytes=hb, tag="compute")
+                s, n_attended, l)
             self._insert_cache(l, blocks)
         logits = yield ComputeOp(lambda hh=h: be.logits(hh),
                                  flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
@@ -799,9 +840,11 @@ class ASH2OEngine(_BlockBaselineEngine):
     probe_prefetch = False
 
     def __init__(self, session, backend, executor, *, budget=0.25,
-                 device_cap=0, host_cap=0):
+                 device_cap=0, host_cap=0,
+                 prefill_chunk_tokens: Optional[int] = None):
         super().__init__(session, backend, executor,
-                         LFUCache(device_cap, host_cap), budget=budget)
+                         LFUCache(device_cap, host_cap), budget=budget,
+                         prefill_chunk_tokens=prefill_chunk_tokens)
 
 
 class IMPRESSEngine(_BlockBaselineEngine):
@@ -811,6 +854,8 @@ class IMPRESSEngine(_BlockBaselineEngine):
     probe_prefetch = True
 
     def __init__(self, session, backend, executor, *, budget=0.25,
-                 device_cap=0, host_cap=0):
+                 device_cap=0, host_cap=0,
+                 prefill_chunk_tokens: Optional[int] = None):
         super().__init__(session, backend, executor,
-                         ImpressScoreCache(device_cap, host_cap), budget=budget)
+                         ImpressScoreCache(device_cap, host_cap), budget=budget,
+                         prefill_chunk_tokens=prefill_chunk_tokens)

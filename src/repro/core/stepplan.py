@@ -51,6 +51,19 @@ class ComputeOp:
     ops, ``weight_bytes`` is the slice of ``hbm_bytes`` that is *shared*
     across a batch (streamed model weights): a batch pays it once while the
     per-request remainder (KV traffic) is summed.
+
+    ``tokens`` is the op's contribution to a batch iteration's token budget:
+    1 for a decode step, the chunk length for a chunk-granular prefill op
+    (``prefill_chunk_tokens``), 0 for ops that must run alone (monolithic
+    prefill, identification, probes).  The scheduler's token-level batch
+    former only coalesces ops with ``tokens > 0`` and caps each iteration
+    at ``max_batch_tokens``.
+
+    ``weight_key`` names the weight stream ``weight_bytes`` refers to:
+    ``"model"`` for decode steps (every layer + LM head) and ``"layer:<l>"``
+    for a single layer's prefill chunk.  Two ops share a weight stream only
+    if their keys match or one of them streams the whole model — a batch of
+    chunks from *different* layers must not pretend to share weights.
     """
 
     fn: Optional[Callable]
@@ -59,6 +72,8 @@ class ComputeOp:
     tag: str = "compute"
     phase: str = "prefill"
     weight_bytes: float = 0.0
+    tokens: int = 0
+    weight_key: str = ""
 
 
 @dataclasses.dataclass

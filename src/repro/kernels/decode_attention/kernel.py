@@ -4,6 +4,12 @@ One new token's query attends over a logically-contiguous KV stream stored as
 scattered physical pages (= ContiguousChunks); the page table is a
 scalar-prefetch operand so the BlockSpec gathers pages by indirection.
 Online softmax across pages in fp32 VMEM scratch.
+
+Besides the attention output, the kernel returns the per-page attention
+probability mass (the attention-guided cache's A_j signal): a running
+raw-mass scratch is rescaled by the same alpha as the softmax accumulator
+and normalized by the final denominator at the last grid step, so the
+engine no longer recomputes scores a second time to extract it.
 """
 from __future__ import annotations
 
@@ -17,8 +23,8 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, scale: float, page: int,
+def _decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, mass_ref,
+                   m_scr, l_scr, acc_scr, mass_scr, *, scale: float, page: int,
                    n_active: int, n_heads: int):
     bh = pl.program_id(0)
     j = pl.program_id(1)
@@ -29,6 +35,7 @@ def _decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
+        mass_scr[...] = jnp.zeros_like(mass_scr)
 
     q = q_ref[0].astype(jnp.float32)  # (1, d)
     k = k_ref[0, 0, :, 0].astype(jnp.float32)  # (page, d)
@@ -45,11 +52,16 @@ def _decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
     acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    # per-page raw mass, kept in the running max's units (same rescale)
+    mass_scr[...] = mass_scr[...] * alpha[0, 0]
+    mass_scr[0, j] = jnp.sum(p)
     m_scr[...] = m_new
 
     @pl.when(j == n_active - 1)
     def _done():
-        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        mass_ref[0, 0] = mass_scr[0] / denom[0, 0]
 
 
 def decode_attention(
@@ -60,7 +72,12 @@ def decode_attention(
     lengths: jax.Array,  # (b,) int32
     *,
     interpret: bool = False,
-) -> jax.Array:
+):
+    """Returns (out (b, n_q, d), mass (b, n_q, n_active) fp32).
+
+    ``mass[b, h, j]`` is the fraction of head ``h``'s attention probability
+    landing on active page ``j``; rows sum to 1 over the active pages.
+    """
     b, n_q, d = q.shape
     _, n_pages, page, n_kv, _ = k_pool.shape
     n_active = page_table.shape[1]
@@ -84,17 +101,25 @@ def decode_attention(
                 lambda bh, j, tbl, ln, nh=n_q, g=group: (
                     bh // nh, tbl[bh // nh, j], 0, (bh % nh) // g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, d), lambda bh, j, tbl, ln, nh=n_q: (bh // nh, bh % nh, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, d), lambda bh, j, tbl, ln, nh=n_q: (bh // nh, bh % nh, 0)),
+            pl.BlockSpec((1, 1, n_active),
+                         lambda bh, j, tbl, ln, nh=n_q: (bh // nh, bh % nh, 0)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, n_active), jnp.float32),
         ],
     )
-    out = pl.pallas_call(
+    out, mass = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, n_q, d), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_q, d), q.dtype),
+            jax.ShapeDtypeStruct((b, n_q, n_active), jnp.float32),
+        ],
         interpret=interpret,
     )(page_table, lengths, q, k_pool, v_pool)
-    return out
+    return out, mass

@@ -15,7 +15,11 @@ def _default_interpret() -> bool:
 
 @partial(jax.jit, static_argnames=("use_kernel",))
 def decode_attention(q, k_pool, v_pool, page_table, lengths, *, use_kernel=True):
-    """q: (b, n_q, d); pools: (b, n_pages, page, n_kv, d); table: (b, n_active)."""
+    """q: (b, n_q, d); pools: (b, n_pages, page, n_kv, d); table: (b, n_active).
+
+    Returns (out, mass): the attention output and the per-page attention
+    probability mass (b, n_q, n_active), so callers feeding the
+    attention-guided cache need not recompute scores."""
     if not use_kernel:
         return decode_attention_ref(q, k_pool, v_pool, page_table, lengths)
     return _kernel(q, k_pool, v_pool, page_table, lengths,

@@ -13,7 +13,8 @@ def decode_attention_ref(
     v_pool: jax.Array,
     page_table: jax.Array,  # (b, n_active) int32 logical->physical
     lengths: jax.Array,  # (b,) valid token count
-) -> jax.Array:
+):
+    """Returns (out (b, n_q, d), mass (b, n_q, n_active) fp32)."""
     b, n_q, d = q.shape
     _, n_pages, page, n_kv, _ = k_pool.shape
     n_active = page_table.shape[1]
@@ -32,4 +33,5 @@ def decode_attention_ref(
     logits = jnp.where(mask[:, None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bngt,btnd->bngd", p.astype(v.dtype), v)
-    return out.reshape(b, n_q, d)
+    mass = p.reshape(b, n_kv, group, n_active, page).sum(-1)
+    return out.reshape(b, n_q, d), mass.reshape(b, n_q, n_active)

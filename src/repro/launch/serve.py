@@ -19,6 +19,13 @@ sparse decode steps run through the scheduler's continuous batching and the
 digest adds mean TPOT / inter-token P50/P95 / decode token throughput.
 ``--ttft-slo S`` attaches a TTFT deadline to every request (pair with
 ``--policy slo_aware`` for earliest-deadline-first admission).
+
+``--prefill-chunk-tokens C`` plans prefill as resumable C-token chunks that
+the sim scheduler mixes into decode iterations (token-level continuous
+batching); ``--max-batch-tokens B`` caps each iteration's batch tokens.
+``--preempt`` enables SLO-driven preemption of decode plans (sim; add
+``--swap-on-preempt`` to also swap the victim's resident units out and back
+through the PCIe cost model).
 """
 from __future__ import annotations
 
@@ -56,7 +63,8 @@ def _real_main(args):
                               chunk_tokens=args.chunk_tokens,
                               coarse_blocks=coarse, in_memory=True)
     ex = RealExecutor()
-    kw = dict(device_cap=64, host_cap=128)
+    kw = dict(device_cap=64, host_cap=128,
+              prefill_chunk_tokens=args.prefill_chunk_tokens)
     if args.system == "contiguous_kv":
         kw.update(budget=args.budget, period=args.period, subperiod=args.subperiod)
     elif args.system != "as_lru":
@@ -100,7 +108,8 @@ def _sim_main(args):
     fleet = build_sim_fleet(args.system, args.model, n_tenants=args.tenants,
                             prefix_len=args.prefix_len, budget=args.budget,
                             period=args.period, subperiod=args.subperiod,
-                            device_cap=args.device_cap, host_cap=args.host_cap)
+                            device_cap=args.device_cap, host_cap=args.host_cap,
+                            prefill_chunk_tokens=args.prefill_chunk_tokens)
     arrivals = make_arrivals(args.arrival, args.rate, args.requests, seed=0)
     rng = np.random.default_rng(0)
     requests = [
@@ -113,7 +122,11 @@ def _sim_main(args):
     ]
     sched = Scheduler(fleet.engines, policy=args.policy,
                       max_concurrency=args.concurrency,
-                      batch_decode=not args.no_batch_decode)
+                      batch_decode=not args.no_batch_decode,
+                      max_batch_tokens=args.max_batch_tokens,
+                      preempt=args.preempt,
+                      swap_on_preempt=args.swap_on_preempt,
+                      prefill_estimate=args.prefill_estimate)
     completed = sched.run(requests)
     for c in completed:
         tr = c.trace
@@ -136,6 +149,9 @@ def _sim_main(args):
     if "slo_attainment" in s:
         print(f"SLO attainment (ttft <= {args.ttft_slo*1e3:.0f}ms): "
               f"{100*s['slo_attainment']:.1f}%")
+    if args.preempt:
+        print(f"preemptions={s['preemptions']} swaps={s['swaps']} "
+              f"swap_bytes={sched.swap_bytes/1e6:.1f}MB")
     usage = fleet.cache.tenant_usage()
     for tenant in sorted(usage):
         u = usage[tenant]
@@ -159,6 +175,18 @@ def main():
                    help="per-request TTFT target in seconds (slo_aware policy)")
     p.add_argument("--no-batch-decode", action="store_true",
                    help="disable continuous batching of decode steps (sim)")
+    p.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                   help="plan prefill as resumable chunks of this many "
+                        "tokens (token-level prefill/decode mixing)")
+    p.add_argument("--max-batch-tokens", type=int, default=None,
+                   help="token budget of one batched iteration (sim)")
+    p.add_argument("--preempt", action="store_true",
+                   help="SLO-driven preemption of decode plans (sim)")
+    p.add_argument("--swap-on-preempt", action="store_true",
+                   help="swap the victim's resident units out/in over PCIe")
+    p.add_argument("--prefill-estimate", type=float, default=None,
+                   help="floor (seconds) for the projected prefill service "
+                        "time; the first-token EWMA raises it")
     # real mode
     p.add_argument("--arch", default="qwen2.5-14b")
     p.add_argument("--dataset", default="rte")

@@ -25,10 +25,22 @@ Admission policies:
   slo_aware   — earliest-deadline-first over per-request TTFT targets.
 
 Decode-phase requests (``Request.decode_tokens > 0``) keep yielding per-token
-steps after the first token.  The sim driver coalesces runnable decode-phase
-ComputeOps of all active plans into a single batched accelerator occupation
-per iteration (continuous batching: FLOPs and per-request KV traffic sum,
-the weight stream is paid once) — disable with ``batch_decode=False``.
+steps after the first token.  The sim driver coalesces runnable *batchable*
+ComputeOps (``op.tokens > 0``: decode tokens and, when engines plan with
+``prefill_chunk_tokens``, chunk-granular prefill ops) of all active plans
+into a single batched accelerator occupation per iteration — true token-level
+mixing of prefill and decode: FLOPs and per-request KV traffic sum, the
+weight stream is paid once, and each iteration is capped at
+``max_batch_tokens`` batch tokens.  Disable with ``batch_decode=False``.
+
+SLO-driven preemption (``preempt=True``, sim driver): when the
+earliest-deadline queued request projects a TTFT miss (its deadline is ahead
+of the next scheduling event plus an EWMA estimate of prefill service time),
+the scheduler preempts an active decode-phase plan at its step boundary and
+admits the urgent request into the freed slot.  With ``swap_on_preempt`` the
+victim's cache-resident units are swapped out over the PCIe channel and
+re-fetched when the plan resumes, both priced through the device model.
+Preempted plans resume with priority as soon as a slot frees.
 """
 from __future__ import annotations
 
@@ -65,6 +77,8 @@ class CompletedRequest:
     result: object  # logits (real mode) / None (sim)
     admitted: float
     finish: float
+    preemptions: int = 0  # times this plan was preempted under SLO pressure
+    swaps: int = 0  # swap-out/swap-in round trips of its resident units
 
     @property
     def ttft(self) -> float:
@@ -122,6 +136,13 @@ class CacheAffinityPolicy:
         return max(queued, key=lambda r: (affinity(r), -r.arrival, -r.request_id))
 
 
+def _deadline(r: Request) -> float:
+    """Absolute TTFT deadline; +inf for best-effort requests."""
+    if r.ttft_target is None:
+        return float("inf")
+    return r.arrival + r.ttft_target
+
+
 class SLOAwarePolicy:
     """Earliest-deadline-first over per-request TTFT targets.
 
@@ -132,12 +153,7 @@ class SLOAwarePolicy:
     name = "slo_aware"
 
     def select(self, queued: Sequence[Request], engines) -> Request:
-        def deadline(r: Request) -> float:
-            if r.ttft_target is None:
-                return float("inf")
-            return r.arrival + r.ttft_target
-
-        return min(queued, key=lambda r: (deadline(r), r.arrival, r.request_id))
+        return min(queued, key=lambda r: (_deadline(r), r.arrival, r.request_id))
 
 
 POLICIES = {"fcfs": FCFSPolicy, "cache_aware": CacheAffinityPolicy,
@@ -145,7 +161,8 @@ POLICIES = {"fcfs": FCFSPolicy, "cache_aware": CacheAffinityPolicy,
 
 
 class _Active:
-    __slots__ = ("request", "plan", "op", "resume", "admitted")
+    __slots__ = ("request", "plan", "op", "resume", "admitted",
+                 "preempt_count", "swap_count", "swapped_bytes", "ttft_seen")
 
     def __init__(self, request: Request, plan: StepPlan, admitted: float):
         self.request = request
@@ -153,6 +170,10 @@ class _Active:
         self.op = None
         self.resume = admitted
         self.admitted = admitted
+        self.preempt_count = 0
+        self.swap_count = 0
+        self.swapped_bytes = 0  # bytes swapped out, re-fetched on resume
+        self.ttft_seen = False  # first token already fed the prefill EWMA
 
 
 # ---------------------------------------------------------------------------
@@ -167,20 +188,42 @@ class Scheduler:
     """
 
     def __init__(self, engines, *, policy: Union[str, object] = "fcfs",
-                 max_concurrency: int = 4, batch_decode: bool = True):
+                 max_concurrency: int = 4, batch_decode: bool = True,
+                 max_batch_tokens: Optional[int] = None,
+                 preempt: bool = False, swap_on_preempt: bool = False,
+                 prefill_estimate: Optional[float] = None):
         if not isinstance(engines, dict):
             engines = {getattr(engines, "tenant", 0): engines}
         assert engines, "need at least one engine"
         assert max_concurrency >= 1
+        assert max_batch_tokens is None or max_batch_tokens >= 1
         executors = {id(e.ex) for e in engines.values()}
         assert len(executors) == 1, "all engines must share one executor"
         self.engines = engines
         self.ex = next(iter(engines.values())).ex
         self.policy = POLICIES[policy]() if isinstance(policy, str) else policy
         self.max_concurrency = max_concurrency
-        # continuous batching: coalesce runnable decode-phase ComputeOps of
-        # all active plans into one batched accelerator occupation (sim)
+        # token-level batching: coalesce runnable batchable ComputeOps
+        # (decode tokens + chunk-granular prefill) of all active plans into
+        # one batched accelerator occupation per iteration (sim), capped at
+        # `max_batch_tokens` batch tokens (None = uncapped)
         self.batch_decode = batch_decode
+        self.max_batch_tokens = max_batch_tokens
+        # SLO-driven preemption of decode plans (sim driver only)
+        self.preempt = preempt
+        self.swap_on_preempt = swap_on_preempt
+        self.preemptions = 0
+        self.swaps = 0
+        self.swap_bytes = 0
+        # TTFT-miss projection: an EWMA of prefill service times observed at
+        # each plan's *first token* (not request completion, so long decodes
+        # don't starve it), floored by the operator-provided
+        # `prefill_estimate` seed (the seed is a lower bound — early
+        # uncontended samples must not dilute it)
+        self._prefill_seed = prefill_estimate
+        self._prefill_ewma: Optional[float] = None
+        # per-iteration batch token counts (observability + property tests)
+        self.batch_log: List[int] = []
 
     def run(self, requests: Sequence[Request]) -> List[CompletedRequest]:
         requests = list(requests)
@@ -196,13 +239,16 @@ class Scheduler:
         slots = [0.0] * self.max_concurrency
         heapq.heapify(slots)
         active: List[_Active] = []
+        preempted: List[_Active] = []
         done: List[CompletedRequest] = []
-        while pending or active:
+        while pending or active or preempted:
+            self._resume_sim(preempted, active, slots)
             self._admit_sim(pending, active, slots, done)
+            self._preempt_sim(pending, active, preempted, slots, done)
             if not active:
                 continue
             a = min(active, key=lambda x: x.resume)
-            batch = self._decode_batch(a, active, slots, done)
+            batch = self._mixed_batch(a, active, slots, done)
             if batch is not None:
                 self._step_sim_batch(batch, active, slots, done)
             else:
@@ -210,19 +256,53 @@ class Scheduler:
         done.sort(key=lambda c: c.request.request_id)
         return done
 
-    def _decode_batch(self, a: _Active, active, slots, done) -> Optional[List[_Active]]:
-        """Assemble one continuous-batching iteration around plan `a`, or None.
+    @property
+    def _prefill_est(self) -> float:
+        """Projected prefill service time: EWMA floored by the seed."""
+        return max(self._prefill_seed or 0.0, self._prefill_ewma or 0.0)
 
-        When the earliest runnable op is a decode-phase ComputeOp, the
-        iteration window is one token time (the op's own duration past the
-        accelerator-free gate).  Peers blocked on I/O that completes inside
-        the window are advanced first (their wait times are fixed by the
-        handle, so resolving them early is time-faithful), then every plan
-        whose decode ComputeOp is runnable inside the window joins the batch.
-        The earliest plan is delayed by at most one token time — the standard
-        iteration-assembly cost of continuous batching."""
+    def _observe_ttft(self, a: _Active):
+        """Feed the prefill EWMA as soon as a plan emits its first token."""
+        if a.ttft_seen:
+            return
+        ttft = getattr(a.plan.trace, "ttft", 0.0)
+        if ttft:
+            a.ttft_seen = True
+            self._prefill_ewma = (ttft if self._prefill_ewma is None
+                                  else 0.5 * self._prefill_ewma + 0.5 * ttft)
+
+    def _finish_sim(self, a: _Active, t: float, slots, done, value):
+        """Release `a`'s slot at time `t` and record the completion."""
+        heapq.heappush(slots, t)
+        self._observe_ttft(a)
+        done.append(CompletedRequest(a.request, a.plan.trace, value,
+                                     a.admitted, t,
+                                     preemptions=a.preempt_count,
+                                     swaps=a.swap_count))
+
+    def _mixed_batch(self, a: _Active, active, slots, done) -> Optional[List[_Active]]:
+        """Assemble one token-level batch iteration around plan `a`, or None.
+
+        When the earliest runnable op is batchable (``op.tokens > 0``: a
+        decode token or a chunk-granular prefill op), the iteration window
+        is the op's own duration past the accelerator-free gate.  Peers
+        blocked on I/O that completes inside the window are advanced first
+        (their wait times are fixed by the handle, so resolving them early
+        is time-faithful), then batchable ComputeOps runnable inside the
+        window join in resume order, while the iteration stays within
+        ``max_batch_tokens`` batch tokens.  The earliest plan always runs
+        (even if alone it exceeds the budget — ops cannot split here).
+
+        Join rule (asymmetric on purpose): a decode-led iteration streams
+        the *whole model's* weights, so prefill chunks of any layer ride it
+        for free (their layer's weight slice is a subset) — this is the
+        token-level prefill/decode mixing.  A chunk-led iteration streams
+        one layer's weights, so it only absorbs chunks with the *same*
+        ``weight_key`` (concurrent prefills on the same layer); letting a
+        decode token join would stretch the chunk from one layer's weight
+        time to the full model's and wreck the leader's TTFT."""
         if not (self.batch_decode and isinstance(a.op, ComputeOp)
-                and a.op.phase == "decode"):
+                and a.op.tokens > 0):
             return None
         gate = max(a.resume, self.ex.free_at["compute"])
         window = gate + self.ex.model.compute_time(a.op.flops, a.op.hbm_bytes)
@@ -238,31 +318,106 @@ class Scheduler:
             try:
                 b.op = b.plan.gen.send(send)
                 b.resume = b.plan.resume_time(b.op)
+                self._observe_ttft(b)
             except StopIteration as stop:
                 active.remove(b)
-                heapq.heappush(slots, b.plan.clock.t)
-                done.append(CompletedRequest(b.request, b.plan.trace, stop.value,
-                                             b.admitted, b.plan.clock.t))
-        return [b for b in active
-                if isinstance(b.op, ComputeOp) and b.op.phase == "decode"
-                and b.resume <= window]
+                self._finish_sim(b, b.plan.clock.t, slots, done, stop.value)
+        def trim(cands, members, total):
+            """Greedy token-budget selection in (leader, resume, id) order."""
+            for b in cands:
+                if (members and self.max_batch_tokens is not None
+                        and total + b.op.tokens > self.max_batch_tokens):
+                    continue  # a later, smaller op may still fit
+                members.append(b)
+                total += b.op.tokens
+            return members, total
+
+        order = lambda b: (b is not a, b.resume, b.request.request_id)
+        if a.op.phase == "decode":
+            decode_cands = sorted(
+                (b for b in active
+                 if isinstance(b.op, ComputeOp) and b.op.tokens > 0
+                 and b.op.phase == "decode" and b.resume <= window),
+                key=order)
+            members, total = trim(decode_cands, [], 0)
+            # prefill chunks ride only if already runnable at the iteration's
+            # start (computed after the budget trim) — a rider must never
+            # delay the decode iteration
+            start = max(b.resume for b in members)
+            riders = sorted(
+                (b for b in active
+                 if isinstance(b.op, ComputeOp) and b.op.tokens > 0
+                 and b.op.phase == "prefill" and b.resume <= start),
+                key=order)
+            members, _ = trim(riders, members, total)
+            return members
+        cands = sorted(
+            (b for b in active
+             if isinstance(b.op, ComputeOp) and b.op.tokens > 0
+             and b.op.weight_key == a.op.weight_key and b.resume <= window),
+            key=order)
+        members, _ = trim(cands, [], 0)
+        return members
 
     def _step_sim_batch(self, members: List[_Active], active, slots, done):
         start = max(b.resume for b in members)
-        items = [(b.op.fn, b.op.flops, b.op.hbm_bytes, b.op.weight_bytes)
-                 for b in members]
-        outs, end = self.ex.compute_batch_at(items, tag=members[0].op.tag,
-                                             at=start)
+        phases = {b.op.phase for b in members}
+        total = sum(b.op.tokens for b in members)
+        items = []
+        for b in members:
+            op = b.op
+            if op.phase == "prefill" and op.fn is None:
+                # drain: pull the plan's consecutive chunks of this layer
+                # into the same iteration while the token budget allows.
+                # Non-final chunks carry fn=None (pure occupancy), so their
+                # results are known and the generator can be advanced at
+                # batch-formation time; the layer's final chunk (fn set)
+                # stops the drain.  Merged pricing: FLOPs and KV re-reads
+                # sum, the layer's weight stream is paid once.
+                flops = op.flops
+                kv = op.hbm_bytes - op.weight_bytes
+                while (op.fn is None
+                       and (self.max_batch_tokens is None
+                            or total + op.tokens <= self.max_batch_tokens)):
+                    nxt = b.plan.gen.send(None)
+                    assert (isinstance(nxt, ComputeOp) and nxt.tokens > 0
+                            and nxt.weight_key == op.weight_key), (
+                        "an fn-less prefill chunk must be followed by its "
+                        "layer's next chunk")
+                    op = b.op = nxt
+                    flops += op.flops
+                    kv += op.hbm_bytes - op.weight_bytes
+                    total += op.tokens
+                items.append((op.fn, flops, op.weight_bytes + kv,
+                              op.weight_bytes))
+            else:
+                items.append((op.fn, op.flops, op.hbm_bytes, op.weight_bytes))
+        tag = members[0].op.tag if len(phases) == 1 else "mixed"
+        self.batch_log.append(total)
+        outs, end = self.ex.compute_batch_at(items, tag=tag, at=start)
         for b, send in zip(members, outs):
             b.plan.clock.t = end
             try:
                 b.op = b.plan.gen.send(send)
                 b.resume = b.plan.resume_time(b.op)
+                self._observe_ttft(b)
             except StopIteration as stop:
                 active.remove(b)
-                heapq.heappush(slots, end)
-                done.append(CompletedRequest(b.request, b.plan.trace, stop.value,
-                                             b.admitted, end))
+                self._finish_sim(b, end, slots, done, stop.value)
+
+    def _start_plan(self, req: Request, start: float, active, slots, done):
+        """Build and admit one plan starting at `start` (slot already held)."""
+        eng = self.engines[req.tenant]
+        plan = eng.plan(req.suffix, req.request_id, arrival=start,
+                        decode_tokens=req.decode_tokens)
+        a = _Active(req, plan, start)
+        try:
+            a.op = plan.gen.send(None)
+        except StopIteration as stop:  # degenerate plan with no ops
+            self._finish_sim(a, start, slots, done, stop.value)
+            return
+        a.resume = plan.resume_time(a.op)
+        active.append(a)
 
     def _admit_sim(self, pending, active, slots, done):
         while pending and len(active) < self.max_concurrency:
@@ -280,19 +435,90 @@ class Scheduler:
             req = self.policy.select(queued, self.engines)
             pending.remove(req)
             start = max(req.arrival, heapq.heappop(slots))
-            eng = self.engines[req.tenant]
-            plan = eng.plan(req.suffix, req.request_id, arrival=start,
-                            decode_tokens=req.decode_tokens)
-            a = _Active(req, plan, start)
-            try:
-                a.op = plan.gen.send(None)
-            except StopIteration as stop:  # degenerate plan with no ops
-                heapq.heappush(slots, start)
-                done.append(CompletedRequest(req, plan.trace, stop.value,
-                                             start, start))
-                continue
-            a.resume = plan.resume_time(a.op)
-            active.append(a)
+            self._start_plan(req, start, active, slots, done)
+
+    def _preempt_sim(self, pending, active, preempted, slots, done):
+        """SLO-driven preemption: evict a decode plan at its step boundary.
+
+        Triggered when every slot is busy and the earliest-deadline queued
+        request (among those already arrived) projects a TTFT miss:
+        ``t_next + prefill_estimate > deadline``, where ``t_next`` is the
+        next scheduling event and the estimate is the EWMA of completed
+        prefill service times.  The victim is the decode-phase plan with
+        the farthest deadline (strictly later than the urgent one); with
+        ``swap_on_preempt`` its cache-resident units are swapped out over
+        the PCIe channel and re-fetched on resume."""
+        if not (self.preempt and pending and active
+                and len(active) >= self.max_concurrency):
+            return
+        t_next = min(a.resume for a in active)
+        urgent_pool = [r for r in pending
+                       if r.ttft_target is not None and r.arrival <= t_next]
+        if not urgent_pool:
+            return
+        urgent = min(urgent_pool,
+                     key=lambda r: (_deadline(r), r.arrival, r.request_id))
+        est = self._prefill_est
+        if max(urgent.arrival, t_next) + est <= _deadline(urgent):
+            return  # no projected miss
+        victims = [a for a in active
+                   if isinstance(a.op, ComputeOp) and a.op.phase == "decode"
+                   and _deadline(a.request) > _deadline(urgent)]
+        if not victims:
+            return
+        v = max(victims, key=lambda a: (_deadline(a.request), a.admitted,
+                                        a.request.request_id))
+        active.remove(v)
+        v.preempt_count += 1
+        self.preemptions += 1
+        if self.swap_on_preempt:
+            nbytes = self._resident_bytes(v)
+            if nbytes:
+                # swap-out occupies the PCIe channel from the victim's step
+                # boundary; the compute slot itself frees immediately
+                self.ex.submit_io_at(None, nbytes=nbytes, n_requests=1,
+                                     channel="pcie", at=v.plan.clock.t)
+                v.swapped_bytes = nbytes
+                v.swap_count += 1
+                self.swaps += 1
+                self.swap_bytes += nbytes
+        preempted.append(v)
+        # the urgent request takes the victim's slot from the victim's step
+        # boundary — no earlier, or the victim's just-finished op and the
+        # urgent plan would transiently coexist in the same slot (the victim
+        # holds no heap entry while preempted; it pops one on resume)
+        pending.remove(urgent)
+        self._start_plan(urgent, max(urgent.arrival, v.plan.clock.t), active,
+                         slots, done)
+
+    def _resume_sim(self, preempted, active, slots):
+        """Resume preempted plans (FIFO) whenever a slot frees; swapped-out
+        units are re-fetched over PCIe before the plan's next op can run."""
+        while preempted and len(active) < self.max_concurrency:
+            v = preempted.pop(0)
+            slot_t = heapq.heappop(slots)
+            t_r = max(v.plan.clock.t, slot_t)
+            if v.swapped_bytes:
+                h = self.ex.submit_io_at(None, nbytes=v.swapped_bytes,
+                                         n_requests=1, channel="pcie", at=t_r)
+                t_r = max(t_r, h.ready_at)
+                self.swap_bytes += v.swapped_bytes
+                v.swapped_bytes = 0
+            v.plan.clock.t = t_r
+            v.resume = v.plan.resume_time(v.op)
+            active.append(v)
+
+    def _resident_bytes(self, a: _Active) -> int:
+        """Bytes of the plan's currently-selected units (the swap payload)."""
+        eng = self.engines[a.request.tenant]
+        layout = eng.session.store.layout
+        sel = a.plan.trace.selected_per_layer
+        if a.plan.trace.decode_selected:
+            per_layer = len(a.plan.trace.decode_selected[-1])
+            n_units = per_layer * max(len(sel), 1)
+        else:
+            n_units = sum(len(u) for u in sel.values())
+        return int(n_units) * int(layout.unit_bytes)
 
     def _step_sim(self, a: _Active, active, slots, done):
         clock = a.plan.clock
@@ -309,11 +535,10 @@ class Scheduler:
         try:
             a.op = a.plan.gen.send(send)
             a.resume = a.plan.resume_time(a.op)
+            self._observe_ttft(a)
         except StopIteration as stop:
             active.remove(a)
-            heapq.heappush(slots, clock.t)
-            done.append(CompletedRequest(a.request, a.plan.trace, stop.value,
-                                         a.admitted, clock.t))
+            self._finish_sim(a, clock.t, slots, done, stop.value)
 
     # -- wall-clock driver (real) ---------------------------------------------
     def _run_real(self, requests: List[Request]) -> List[CompletedRequest]:
@@ -406,4 +631,6 @@ def summarize(completed: Sequence[CompletedRequest]) -> Dict[str, float]:
     slo = [c.slo_met for c in completed if c.slo_met is not None]
     if slo:
         out["slo_attainment"] = float(np.mean(slo))
+    out["preemptions"] = int(sum(getattr(c, "preemptions", 0) for c in completed))
+    out["swaps"] = int(sum(getattr(c, "swaps", 0) for c in completed))
     return out

@@ -60,6 +60,7 @@ def build_sim_fleet(
     host_cap: int = 1024,
     device_model: Optional[DeviceModel] = None,
     seed: int = 0,
+    prefill_chunk_tokens: Optional[int] = None,
 ) -> TenantFleet:
     """Build `n_tenants` engines of one system sharing executor + cache.
 
@@ -84,9 +85,11 @@ def build_sim_fleet(
             if shared_cache is None:
                 shared_cache = AttentionGuidedCache(device_cap, host_cap)
             eng = cls(sess, be, executor, cache=shared_cache, budget=budget,
-                      period=period, subperiod=subperiod)
+                      period=period, subperiod=subperiod,
+                      prefill_chunk_tokens=prefill_chunk_tokens)
         else:
-            kw = dict(device_cap=device_cap, host_cap=host_cap)
+            kw = dict(device_cap=device_cap, host_cap=host_cap,
+                      prefill_chunk_tokens=prefill_chunk_tokens)
             if system != "as_lru":
                 kw["budget"] = budget
             eng = cls(sess, be, executor, **kw)

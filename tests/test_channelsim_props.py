@@ -83,6 +83,42 @@ def test_busy_time_conserved(ops):
         assert event_busy == pytest.approx(expect[ch], rel=1e-12)
 
 
+batched_op_strategy = st.lists(
+    st.tuples(
+        st.floats(0.0, 5.0),  # earliest-start
+        st.integers(1, 8),  # batch width (members)
+        st.integers(1, 1 << 22),  # per-item cost scale
+    ),
+    min_size=1,
+    max_size=30,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=batched_op_strategy)
+def test_batched_occupations_conserve_busy_time(ops):
+    """Busy-time conservation extends to batched occupations: each batch is
+    one occupancy priced as compute_time(sum flops, max weights + sum KV),
+    occupancies never overlap, and the busy counter matches the events."""
+    sim = ChannelSim(DeviceModel())
+    expect = 0.0
+    for at, width, size in ops:
+        weight = float(size)
+        items = [(None, size * 1e6 * (i + 1), weight + size * (i + 1), weight)
+                 for i in range(width)]
+        flops = sum(it[1] for it in items)
+        hbm = weight + sum(it[2] - weight for it in items)
+        expect += sim.model.compute_time(flops, hbm)
+        sim.compute_batch_at(items, tag="mix", at=at)
+    evs = [(s, e) for s, e, res, _ in sim.events if res == "compute"]
+    assert len(evs) == len(ops)  # one occupation per batch
+    for (s0, e0), (s1, e1) in zip(evs, evs[1:]):
+        assert s1 >= e0 - 1e-12
+    event_busy = sum(e - s for s, e in evs)
+    assert sim.busy["compute"] == pytest.approx(expect, rel=1e-12)
+    assert event_busy == pytest.approx(expect, rel=1e-12)
+
+
 def test_batched_compute_occupies_once_and_prices_shared_weights():
     """compute_batch_at: one occupancy; weights paid once, KV summed; a
     single-item batch is priced exactly like compute_at."""

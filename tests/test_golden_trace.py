@@ -1,10 +1,17 @@
 """Golden-trace regression: the ContiguousKV sim timeline is pinned exactly.
 
-A small serving scenario (2 requests, concurrency 2, 2 decode tokens each)
-is run through the Scheduler over ChannelSim and every channel occupancy
-(start, end, resource, tag) is compared — to the nanosecond — against a
-committed fixture.  Scheduler or discrete-event refactors that shift the
-timeline in any way fail loudly instead of silently re-basing the model.
+Two serving scenarios run through the Scheduler over ChannelSim and every
+channel occupancy (start, end, resource, tag) is compared — to the
+nanosecond — against a committed fixture:
+
+  ckv_sim_timeline.json   — 2 requests, concurrency 2, 2 decode tokens
+                            (continuous decode batching);
+  ckv_mixed_timeline.json — chunked prefill mixed into decode iterations
+                            plus one forced SLO preemption with swap
+                            (token-level batching + preempt/resume).
+
+Scheduler or discrete-event refactors that shift the timeline in any way
+fail loudly instead of silently re-basing the model.
 
 Regenerate (after an *intentional* timing-model change) with:
 
@@ -23,6 +30,7 @@ from repro.serving import Request, Scheduler
 from repro.storage.timing import ChannelSim, DeviceModel
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "ckv_sim_timeline.json"
+GOLDEN_MIXED = pathlib.Path(__file__).parent / "golden" / "ckv_mixed_timeline.json"
 
 MODEL = "qwen2.5-7b"
 PREFIX = 512
@@ -52,16 +60,66 @@ def _run_scenario():
             "events": events, "ttft": ttfts, "finish": finishes}
 
 
-def test_sim_timeline_matches_golden_fixture():
-    got = _run_scenario()
+def _run_mixed_scenario():
+    """Chunked prefill mixed into a decode stream + one forced preemption.
+
+    r0/r1 decode from t=0; r2 arrives mid-decode with an unmeetable TTFT
+    target, forcing an SLO preemption (swap out + re-fetch on resume) of the
+    farthest-deadline decode plan; r2's chunked prefill then mixes with the
+    survivor's decode iterations.
+    """
+    cfg = get_config(MODEL)
+    wl = SyntheticWorkload(PREFIX, cfg.n_layers, seed=3)
+    sess = build_sim_session(cfg, PREFIX)
+    ex = ChannelSim(DeviceModel())
+    eng = ContiguousKVEngine(sess, SimCompute(cfg, wl), ex,
+                             budget=0.25, device_cap=64, host_cap=128,
+                             prefill_chunk_tokens=16)
+    reqs = [Request(request_id=rid, suffix=np.zeros(32, np.int64) + rid,
+                    arrival=0.0, decode_tokens=8)
+            for rid in range(3)]
+    reqs.append(Request(request_id=3, suffix=np.zeros(32, np.int64) + 3,
+                        arrival=0.05, ttft_target=1e-3))
+    sched = Scheduler(eng, policy="slo_aware", max_concurrency=3,
+                      max_batch_tokens=64, preempt=True,
+                      swap_on_preempt=True, prefill_estimate=10.0)
+    done = sched.run(reqs)
+    events = [[round(s, ROUND), round(e, ROUND), res, tag]
+              for s, e, res, tag in ex.events]
+    return {"model": MODEL, "prefix": PREFIX, "chunk_tokens": 16,
+            "events": events,
+            "ttft": {str(c.request.request_id): round(c.ttft, ROUND)
+                     for c in done},
+            "finish": {str(c.request.request_id): round(c.finish, ROUND)
+                       for c in done},
+            "preemptions": sched.preemptions, "swaps": sched.swaps}
+
+
+def _check_against(got, path):
     if os.environ.get("GOLDEN_REGEN"):
-        GOLDEN.parent.mkdir(exist_ok=True)
-        GOLDEN.write_text(json.dumps(got, indent=None, separators=(",", ":"))
-                          + "\n")
-    want = json.loads(GOLDEN.read_text())
+        path.parent.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=None, separators=(",", ":"))
+                        + "\n")
+    want = json.loads(path.read_text())
     assert got["ttft"] == want["ttft"]
     assert got["finish"] == want["finish"]
     assert len(got["events"]) == len(want["events"]), (
         f"event count drifted: {len(got['events'])} vs {len(want['events'])}")
     for i, (g, w) in enumerate(zip(got["events"], want["events"])):
         assert g == w, f"event {i} drifted: {g} != {w}"
+    return want
+
+
+def test_sim_timeline_matches_golden_fixture():
+    _check_against(_run_scenario(), GOLDEN)
+
+
+def test_mixed_timeline_matches_golden_fixture():
+    got = _run_mixed_scenario()
+    # the scenario must actually exercise the new machinery before pinning
+    assert got["preemptions"] == 1 and got["swaps"] == 1
+    assert any("mixed" in tag for _, _, _, tag in got["events"]), (
+        "no mixed prefill+decode iteration in the pinned scenario")
+    want = _check_against(got, GOLDEN_MIXED)
+    assert got["preemptions"] == want["preemptions"]
+    assert got["swaps"] == want["swaps"]

@@ -158,10 +158,15 @@ class TestDecodeAttention:
             jax.random.permutation(jax.random.PRNGKey(10), n_pages)[:n_act],
         ]).astype(jnp.int32)
         lens = jnp.array([n_act * page - 3, n_act * page - 17], jnp.int32)
-        got = decode_attention(q, kp, vp, tbl, lens, interpret=True)
-        ref = decode_attention_ref(q, kp, vp, tbl, lens)
+        got, mass_g = decode_attention(q, kp, vp, tbl, lens, interpret=True)
+        ref, mass_r = decode_attention_ref(q, kp, vp, tbl, lens)
         np.testing.assert_allclose(np.asarray(got, np.float32),
                                    np.asarray(ref, np.float32), **_tol(dtype))
+        # per-page mass matches the oracle and normalizes per head
+        np.testing.assert_allclose(np.asarray(mass_g), np.asarray(mass_r),
+                                   rtol=5e-3, atol=5e-4)
+        np.testing.assert_allclose(np.asarray(mass_g.sum(-1)),
+                                   np.ones((b, nq)), rtol=1e-3)
 
     @given(n_act=st.integers(1, 8), valid_frac=st.floats(0.2, 1.0))
     @settings(max_examples=8, deadline=None)
@@ -172,10 +177,12 @@ class TestDecodeAttention:
         vp = _rand(2, (b, n_pages, page, nkv, d), jnp.float32)
         tbl = jnp.arange(n_act, dtype=jnp.int32)[None]
         lens = jnp.array([max(1, int(n_act * page * valid_frac))], jnp.int32)
-        got = decode_attention(q, kp, vp, tbl, lens, interpret=True)
-        ref = decode_attention_ref(q, kp, vp, tbl, lens)
+        got, mass_g = decode_attention(q, kp, vp, tbl, lens, interpret=True)
+        ref, mass_r = decode_attention_ref(q, kp, vp, tbl, lens)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(mass_g), np.asarray(mass_r),
+                                   rtol=3e-4, atol=3e-5)
 
 
 class TestSelectiveScan:

@@ -28,13 +28,14 @@ def _suffix(rid):
     return np.zeros(48, np.int64) + rid % 5
 
 
-def _engine(system: str, executor):
+def _engine(system: str, executor, prefill_chunk_tokens=None):
     cfg = get_config(MODEL)
     wl = SyntheticWorkload(PREFIX, cfg.n_layers, seed=2)
     coarse = system != "contiguous_kv"
     sess = build_sim_session(cfg, PREFIX, coarse_blocks=coarse)
     cls = ENGINE_CLASSES[system]
-    kw = dict(device_cap=200, host_cap=800)
+    kw = dict(device_cap=200, host_cap=800,
+              prefill_chunk_tokens=prefill_chunk_tokens)
     if system == "contiguous_kv":
         kw.update(budget=0.25, period=8, subperiod=4)
     elif system != "as_lru":
@@ -75,6 +76,88 @@ def test_concurrency_one_bit_identical_to_serial(system, policy, serial_traces):
             ref.ssd_bytes, ref.ssd_requests, ref.pcie_bytes)
         assert (got.hits_device, got.hits_host, got.misses) == (
             ref.hits_device, ref.hits_host, ref.misses)
+
+
+@pytest.mark.parametrize("chunk", [48, 64, 10_000])
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_chunk_tokens_ge_suffix_is_bit_identical(system, chunk, serial_traces):
+    """`prefill_chunk_tokens >= suffix_len` collapses to the monolithic
+    per-layer op: plans, pricing and timeline are bit-identical to the
+    unchunked engine (the suffix here is 48 tokens)."""
+    eng = _engine(system, SimExecutor(DeviceModel()),
+                  prefill_chunk_tokens=chunk)
+    for rid in range(N_REQ):
+        _, got = eng.reprefill(_suffix(rid), request_id=rid)
+        ref = serial_traces[system][rid]
+        assert got.ttft == ref.ttft, f"{system}/chunk={chunk} req {rid} ttft"
+        assert got.stages == ref.stages
+        assert (got.ssd_bytes, got.ssd_requests, got.pcie_bytes) == (
+            ref.ssd_bytes, ref.ssd_requests, ref.pcie_bytes)
+        assert (got.hits_device, got.hits_host, got.misses) == (
+            ref.hits_device, ref.hits_host, ref.misses)
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_chunked_plans_select_identically(system):
+    """Chunking changes op granularity and timing, never selection: the
+    chunked engine picks the same units per layer as the unchunked one."""
+    a = _engine(system, SimExecutor(DeviceModel()))
+    b = _engine(system, SimExecutor(DeviceModel()), prefill_chunk_tokens=16)
+    _, tr_a = a.reprefill(_suffix(0), request_id=0)
+    _, tr_b = b.reprefill(_suffix(0), request_id=0)
+    assert set(tr_a.selected_per_layer) == set(tr_b.selected_per_layer)
+    for l in tr_a.selected_per_layer:
+        np.testing.assert_array_equal(tr_a.selected_per_layer[l],
+                                      tr_b.selected_per_layer[l])
+    assert (tr_a.ssd_bytes, tr_a.hits_device, tr_a.misses) == (
+        tr_b.ssd_bytes, tr_b.hits_device, tr_b.misses)
+
+
+def _preempt_scenario(preempt: bool, urgent_arrival: float):
+    eng = _engine("contiguous_kv", ChannelSim(DeviceModel()))
+    sched = Scheduler(eng, policy="slo_aware", max_concurrency=1,
+                      preempt=preempt, swap_on_preempt=True,
+                      prefill_estimate=10.0)
+    reqs = [Request(request_id=0, suffix=_suffix(0), arrival=0.0,
+                    decode_tokens=6),
+            Request(request_id=1, suffix=_suffix(1), arrival=urgent_arrival,
+                    ttft_target=1e-3)]
+    done = sched.run(reqs)
+    return {c.request.request_id: c for c in done}, sched
+
+
+def test_preempt_resume_round_trip_preserves_plan():
+    """A preempt -> swap-out -> resume -> swap-in round trip reproduces the
+    uninterrupted plan's unit selections, first-token timing and decode
+    length; the urgent request's TTFT improves."""
+    # time the victim's decode phase to land the urgent arrival inside it
+    ref_eng = _engine("contiguous_kv", SimExecutor(DeviceModel()))
+    _, ref_tr = ref_eng.reprefill(_suffix(0), request_id=0, decode_tokens=6)
+    urgent_arrival = (ref_tr.decode_times[1] + ref_tr.decode_times[2]) / 2
+
+    base, _ = _preempt_scenario(False, urgent_arrival)
+    got, sched = _preempt_scenario(True, urgent_arrival)
+
+    assert sched.preemptions == 1 and sched.swaps == 1
+    assert got[0].preemptions == 1 and got[0].swaps == 1
+    assert base[0].preemptions == 0
+
+    vb, vg = base[0].trace, got[0].trace
+    # first token predates the preemption: identical timing
+    assert vg.ttft == vb.ttft
+    assert vg.first_token_at == vb.first_token_at
+    # unit selections (prefill periods + every decode step) are reproduced
+    assert len(vg.selected_per_period) == len(vb.selected_per_period)
+    for sa, sb in zip(vb.selected_per_period, vg.selected_per_period):
+        np.testing.assert_array_equal(sa, sb)
+    assert len(vg.decode_selected) == len(vb.decode_selected) == 6
+    for sa, sb in zip(vb.decode_selected, vg.decode_selected):
+        np.testing.assert_array_equal(sa, sb)
+    assert len(vg.decode_times) == 6
+    # the victim resumed after the urgent request: it finishes later, the
+    # urgent request's TTFT improves
+    assert got[0].finish > base[0].finish
+    assert got[1].ttft < base[1].ttft
 
 
 @pytest.mark.parametrize("system", SYSTEMS)
