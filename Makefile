@@ -12,11 +12,18 @@
 PY := python
 export PYTHONPATH := src
 
+# test_serving_parity.py / test_mixed_batch_props.py include the real-mode
+# (wall-clock, interpret-Pallas) regression tests: the c=1 bit-parity matrix
+# vs drive_serial and the real batch-former properties
 SERVING_TESTS := tests/test_serving.py tests/test_serving_parity.py \
 	tests/test_channelsim_props.py tests/test_mixed_batch_props.py \
 	tests/test_golden_trace.py tests/test_decode.py
 
-.PHONY: verify verify-core verify-core-tests verify-serving test bench-throughput
+# run by verify-core-tests (not part of the serving suite): the TailPool
+# equivalence tests and the decode_attention ragged-batch kernel sweep
+KERNEL_TESTS := tests/test_kernels.py tests/test_tail_pool.py
+
+.PHONY: verify verify-core verify-core-tests verify-kernels verify-serving test bench-throughput
 
 verify: test bench-throughput
 
@@ -25,12 +32,18 @@ test:
 
 verify-core: verify-core-tests verify-serving
 
+# full-tree discovery: picks up $(KERNEL_TESTS) (TailPool + ragged decode
+# kernel sweep) along with everything outside the serving suite
 verify-core-tests:
 	$(PY) -m pytest -q --durations=15 \
 		--deselect tests/test_sharded_sparse.py \
 		--deselect tests/test_sharding_small.py \
 		--deselect tests/test_checkpoint.py::TestCheckpoint::test_elastic_restore_onto_different_mesh \
 		$(addprefix --ignore=,$(SERVING_TESTS))
+
+# fast inner loop for kernel / TailPool work
+verify-kernels:
+	$(PY) -m pytest -q --durations=15 $(KERNEL_TESTS)
 
 verify-serving:
 	$(PY) -m pytest -q --durations=15 $(SERVING_TESTS)

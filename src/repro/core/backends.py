@@ -43,6 +43,15 @@ def _part_a(lp, h, cfg: ModelConfig, pos0: int):
     return x, q, k, v
 
 
+@partial(jax.jit, static_argnames=("cfg",))
+def _part_a_at(lp, h, cfg: ModelConfig, positions):
+    """Batched pre-attention: per-request positions as a traced (b, s) array
+    (decode steps of concurrent requests sit at different absolute offsets)."""
+    x = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = qkv_project(x, lp, cfg, positions)
+    return x, q, k, v
+
+
 @partial(jax.jit, static_argnames=("cfg", "chunk_tokens"))
 def _part_b(lp, h, q, k_suf, v_suf, k_sel, v_sel, sel_valid, cfg: ModelConfig,
             chunk_tokens: int):
@@ -64,6 +73,120 @@ def _final_logits_kernel(params, h, norm_eps: float):
     return jnp.einsum("...d,dv->...v", h, w).astype(jnp.float32)
 
 
+class TailPool:
+    """Preallocated paged KV pool for one (request, layer)'s decode phase.
+
+    Layout: ``[n_res resident unit pages | tail capacity pages]`` in one
+    fixed-size numpy buffer of shape ``(n_pages, page, n_kv, d)``.  The
+    cache-resident unit pages and the prefill suffix KV are paged in exactly
+    once at construction; each decode step writes its token's K/V into the
+    next tail slot *in place* (a flat view of the contiguous buffer), so the
+    per-step ``jnp.concatenate``/re-pad of the suffix+decoded tail that the
+    pre-TailPool path performed is gone (ROADMAP PR-3 known issue).
+
+    Because the buffer, the page table (``table()``: active pages first, pad
+    slots marked ``-1``) and ``lengths`` all keep a *fixed* shape while the
+    tail grows, every decode step of a request hits the same jit cache entry
+    of :func:`repro.kernels.decode_attention.ops.decode_attention`, and a
+    scheduler can stack several requests' pools into one ragged batch.
+    """
+
+    __slots__ = ("page", "n_res", "cap_pages", "k", "v", "t")
+
+    def __init__(self, k_res: np.ndarray, v_res: np.ndarray, kv_suffix,
+                 page: int, extra_tokens: int, dtype=None):
+        """k_res/v_res: (n_res, page, n_kv, d) resident unit pages;
+        kv_suffix: (k, v) each (1, s, n_kv, d) from prefill, or None;
+        extra_tokens: decode-token capacity to preallocate past the suffix.
+        With ``kv_suffix=None``, pass the model compute dtype explicitly —
+        appended tail KV must not be silently cast to the storage dtype."""
+        assert page >= 1 and extra_tokens >= 0
+        self.page = page
+        self.n_res = int(k_res.shape[0])
+        k_suf = None if kv_suffix is None else np.asarray(kv_suffix[0][0])
+        v_suf = None if kv_suffix is None else np.asarray(kv_suffix[1][0])
+        s = 0 if k_suf is None else k_suf.shape[0]
+        self.cap_pages = max(1, -(-(s + extra_tokens) // page))
+        n_kv, d = k_res.shape[2], k_res.shape[3]
+        # the pool dtype follows the tail KV (model compute dtype), exactly
+        # like the old concatenate path cast the resident pages to it
+        if dtype is None:
+            dtype = k_res.dtype if k_suf is None else k_suf.dtype
+        shape = (self.n_res + self.cap_pages, page, n_kv, d)
+        self.k = np.zeros(shape, dtype)
+        self.v = np.zeros(shape, dtype)
+        self.k[: self.n_res] = k_res
+        self.v[: self.n_res] = v_res
+        self.t = 0  # valid tail tokens (suffix + decoded so far)
+        if s:
+            self._write(k_suf, v_suf)
+
+    def _write(self, k_new: np.ndarray, v_new: np.ndarray):
+        """Append (t, n_kv, d) rows at the tail cursor — in-place flat view."""
+        n = k_new.shape[0]
+        if self.t + n > self.cap_pages * self.page:
+            raise ValueError(
+                f"TailPool overflow: {self.t} + {n} tokens exceed capacity "
+                f"{self.cap_pages * self.page}")
+        flat_k = self.k[self.n_res:].reshape(-1, *self.k.shape[2:])
+        flat_v = self.v[self.n_res:].reshape(-1, *self.v.shape[2:])
+        flat_k[self.t: self.t + n] = k_new
+        flat_v[self.t: self.t + n] = v_new
+        self.t += n
+
+    def append(self, k_tok, v_tok):
+        """Write one decode position's KV ((1, 1, n_kv, d) device or numpy)
+        into its page slot."""
+        self._write(np.asarray(k_tok).reshape(1, *self.k.shape[2:]),
+                    np.asarray(v_tok).reshape(1, *self.v.shape[2:]))
+
+    @property
+    def n_tail_pages(self) -> int:
+        return -(-self.t // self.page)
+
+    @property
+    def n_active(self) -> int:
+        """Pages carrying valid tokens: resident + filled tail pages."""
+        return self.n_res + self.n_tail_pages
+
+    @property
+    def valid_tokens(self) -> int:
+        return self.n_res * self.page + self.t
+
+    def table(self, width: int = 0) -> np.ndarray:
+        """Page table padded with -1 to `width` (default: full capacity)."""
+        width = width or (self.n_res + self.cap_pages)
+        assert width >= self.n_active
+        tbl = np.full(width, -1, np.int32)
+        tbl[: self.n_active] = np.arange(self.n_active, dtype=np.int32)
+        return tbl
+
+
+def stack_tail_pools(pools):
+    """Pack b requests' TailPools into one ragged decode-attention batch.
+
+    Returns (k_pool, v_pool, table, lengths): pools zero-padded to the
+    common page count, tables padded with -1 to the common ``n_active``
+    width so pad slots are fully masked by the kernel."""
+    b = len(pools)
+    assert all(p.k.shape[1:] == pools[0].k.shape[1:] and
+               p.k.dtype == pools[0].k.dtype for p in pools), (
+        "a ragged batch must share one page geometry and dtype")
+    n_pages = max(p.k.shape[0] for p in pools)
+    width = max(p.n_res + p.cap_pages for p in pools)
+    dtype = pools[0].k.dtype
+    k = np.zeros((b, n_pages) + pools[0].k.shape[1:], dtype)
+    v = np.zeros_like(k)
+    table = np.full((b, width), -1, np.int32)
+    lengths = np.zeros(b, np.int32)
+    for i, p in enumerate(pools):
+        k[i, : p.k.shape[0]] = p.k
+        v[i, : p.v.shape[0]] = p.v
+        table[i] = p.table(width)
+        lengths[i] = p.valid_tokens
+    return k, v, table, lengths
+
+
 class RealCompute:
     """Tiny-model execution; batch = 1 request."""
 
@@ -78,6 +201,12 @@ class RealCompute:
     def part_a(self, layer: int, h, prefix_len: int):
         lp = _slice_layer(self.params, layer)
         return _part_a(lp, h, self.cfg, int(prefix_len))
+
+    def part_a_at(self, layer: int, h, positions):
+        """part_a with traced (b, s) positions: decode steps advance their
+        position every token, so a static-offset jit would retrace per step."""
+        lp = _slice_layer(self.params, layer)
+        return _part_a_at(lp, h, self.cfg, jnp.asarray(positions, jnp.int32))
 
     def token_scores(self, q, k_probe: np.ndarray, layer: int) -> np.ndarray:
         """q: (1, s, nq, d) device; k_probe: (n, n_kv, d_probe) numpy."""
@@ -102,54 +231,73 @@ class RealCompute:
     def logits(self, h) -> np.ndarray:
         return np.asarray(_final_logits_kernel(self.params, h, self.cfg.norm_eps))
 
-    def decode_attend(self, layer: int, h, q, k_res, v_res, kv_suffix, kv_dec,
-                      kv_cur, page: int):
-        """One decode position's sparse attention over resident unit pages.
+    def decode_attend(self, layer: int, h, q, tail: TailPool):
+        """One decode position's sparse attention over `tail`'s paged pool.
 
-        k_res/v_res: (n_res, page, n_kv, d) numpy pages of cache-resident
-        units; kv_suffix: (k, v) each (1, s, n_kv, d) from prefill; kv_dec:
-        earlier decode positions' [(k, v)] each (1, 1, n_kv, d); kv_cur: this
-        position's. The tail (suffix + decoded + current) is packed into
-        `page`-sized pages after the resident pages and the whole pool goes
-        through repro.kernels.decode_attention. Returns (h_out, mass) where
-        mass is the per-resident-page attention probability (AGC's A_j).
+        The pool already holds the cache-resident unit pages, the suffix KV
+        (paged once at decode start) and every decoded position including the
+        current one (appended by the caller before attending), so no per-step
+        concatenate/re-pad happens and the call shape is fixed for the whole
+        decode.  Returns (h_out, mass) where mass is the per-resident-page
+        attention probability (AGC's A_j).
         """
         cfg = self.cfg
         lp = _slice_layer(self.params, layer)
-        n_res = k_res.shape[0]
-        d = cfg.d_head
-        tail_k = [kv_cur[0]] if kv_suffix is None else [kv_suffix[0], kv_cur[0]]
-        tail_v = [kv_cur[1]] if kv_suffix is None else [kv_suffix[1], kv_cur[1]]
-        if kv_dec:
-            tail_k[-1:-1] = [k for k, _ in kv_dec]
-            tail_v[-1:-1] = [v for _, v in kv_dec]
-        tk = jnp.concatenate(tail_k, axis=1)[0]  # (t_tail, n_kv, d)
-        tv = jnp.concatenate(tail_v, axis=1)[0]
-        t_tail = tk.shape[0]
-        n_tail = -(-t_tail // page)
-        pad = n_tail * page - t_tail
-        if pad:
-            tk = jnp.pad(tk, ((0, pad), (0, 0), (0, 0)))
-            tv = jnp.pad(tv, ((0, pad), (0, 0), (0, 0)))
-        k_pool = jnp.concatenate(
-            [jnp.asarray(k_res, tk.dtype), tk.reshape(n_tail, page, cfg.n_kv_heads, d)]
-        )[None]
-        v_pool = jnp.concatenate(
-            [jnp.asarray(v_res, tv.dtype), tv.reshape(n_tail, page, cfg.n_kv_heads, d)]
-        )[None]
-        n_pages = n_res + n_tail
-        table = jnp.arange(n_pages, dtype=jnp.int32)[None]
-        lengths = jnp.array([n_res * page + t_tail], jnp.int32)
+        k_pool = jnp.asarray(tail.k)[None]
+        v_pool = jnp.asarray(tail.v)[None]
+        table = jnp.asarray(tail.table())[None]
+        lengths = jnp.array([tail.valid_tokens], jnp.int32)
         q1 = q[:, 0]  # (1, n_q, d) — single decode position
         out, page_mass = decode_attention(q1, k_pool, v_pool, table, lengths)
-        attn = out.reshape(1, 1, cfg.n_heads, d)
+        attn = out.reshape(1, 1, cfg.n_heads, cfg.d_head)
         o = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"])
         h = h + o
         h = _ffn(h, lp, cfg, dropless=True)
         # per-resident-page attention mass (decode-time cache scores) comes
         # straight from the kernel's online softmax — no second score pass
-        mass = page_mass[0].mean(axis=0)[:n_res]  # head-avg, resident pages
+        mass = page_mass[0].mean(axis=0)[: tail.n_res]  # head-avg, resident
         return h, np.asarray(mass)
+
+    def decode_step_batch(self, ctxs):
+        """One decode position for b requests in a single batched pass.
+
+        `ctxs` are :class:`repro.core.stepplan.DecodeBatchCtx` handles the
+        engines stamped on their decode ComputeOps: input token, absolute
+        position, and the per-layer TailPools.  One embed / part-A / paged
+        decode-attention / FFN pass runs per layer for the whole ragged batch
+        (per-request page tables padded to a common width, `lengths` masking
+        the pads), amortizing the weight stream the way the sim scheduler's
+        `compute_batch_at` prices it.  Returns one (logits, masses) pair per
+        request, in `ctxs` order — exactly what the per-request generators
+        expect from their single-request `fn`.
+        """
+        cfg = self.cfg
+        b = len(ctxs)
+        tokens = np.array([c.token for c in ctxs], np.int64)[:, None]
+        h = _embed(self.params, jnp.asarray(tokens), cfg)  # (b, 1, d_model)
+        positions = jnp.asarray([[c.pos] for c in ctxs], jnp.int32)
+        masses = [{} for _ in ctxs]
+        for l in range(cfg.n_layers):
+            lp = _slice_layer(self.params, l)
+            _, q, k_cur, v_cur = _part_a_at(lp, h, cfg, positions)
+            k_host = np.asarray(k_cur)  # (b, 1, n_kv, d) — one transfer
+            v_host = np.asarray(v_cur)
+            for i, c in enumerate(ctxs):
+                c.pools[l].append(k_host[i], v_host[i])
+            k_pool, v_pool, table, lengths = stack_tail_pools(
+                [c.pools[l] for c in ctxs])
+            out, page_mass = decode_attention(
+                q[:, 0], jnp.asarray(k_pool), jnp.asarray(v_pool),
+                jnp.asarray(table), jnp.asarray(lengths))
+            attn = out.reshape(b, 1, cfg.n_heads, cfg.d_head)
+            o = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"])
+            h = h + o
+            h = _ffn(h, lp, cfg, dropless=True)
+            pm = np.asarray(page_mass)  # (b, n_q, width)
+            for i, c in enumerate(ctxs):
+                masses[i][l] = pm[i].mean(axis=0)[: c.pools[l].n_res]
+        logits = np.asarray(_final_logits_kernel(self.params, h, cfg.norm_eps))
+        return [(logits[i: i + 1], masses[i]) for i in range(b)]
 
 
 class SimCompute:

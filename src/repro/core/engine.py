@@ -45,8 +45,10 @@ from repro.core.importance import (
 )
 from repro.core.periods import PeriodSchedule
 from repro.core.sparse_attention import bucket_size
+from repro.core.backends import TailPool
 from repro.core.stepplan import (
     ComputeOp,
+    DecodeBatchCtx,
     RequestClock,
     StepPlan,
     WaitOp,
@@ -98,6 +100,7 @@ class ReprefillTrace:
     first_token_at: float = 0.0  # absolute clock time of the first token
     decode_times: List[float] = dataclasses.field(default_factory=list)
     decode_selected: List[np.ndarray] = dataclasses.field(default_factory=list)
+    decode_tokens_out: List[int] = dataclasses.field(default_factory=list)  # real mode: greedy token ids
 
     @property
     def read_amplification(self) -> float:
@@ -445,8 +448,12 @@ class _EngineBase:
                costmodel-priced ComputeOp a scheduler may batch with other
                requests' decode steps;
         real — sparse decode attention (repro.kernels.decode_attention) over
-               the prefill-resident units plus the request's own suffix and
-               decoded-token KV; greedy next-token feedback.
+               a preallocated per-layer :class:`TailPool` built once at
+               decode start (resident unit pages + suffix KV paged in, each
+               decoded token's KV written into its page slot in place);
+               greedy next-token feedback.  Each decode ComputeOp carries a
+               :class:`DecodeBatchCtx` so a wall-clock driver can coalesce
+               concurrent requests' steps into one batched kernel pass.
 
         Both modes refresh the attention-guided cache from decode-time
         scores (Eq. 2 keeps accumulating past the first token).
@@ -459,7 +466,22 @@ class _EngineBase:
         trace.first_token_at = clock.t
         weight_bytes = CM.decode_weight_bytes(cfg)
         tok = int(np.argmax(logits[0, -1])) if logits is not None else 0
-        kv_dec: Dict[int, list] = {l: [] for l in range(cfg.n_layers)}
+        pools: Dict[int, TailPool] = {}
+        res_layers: Dict[int, np.ndarray] = {}
+        if not self.sim:
+            # page the whole decode-attention pool exactly once: resident
+            # unit pages + suffix KV now, one in-place slot per future token
+            res_layers = {l: np.asarray(resident.get(l, []), dtype=int)
+                          for l in range(cfg.n_layers)}
+            # model compute dtype, so a layer without suffix KV never falls
+            # back to the fp16 storage dtype for its decoded tail
+            compute_dtype = next(
+                (np.dtype(kv[0].dtype) for kv in kv_suffix.values()), None)
+            for l in range(cfg.n_layers):
+                k_res, v_res = self._gather_unit_pages(l, res_layers[l])
+                pools[l] = TailPool(k_res, v_res, kv_suffix.get(l),
+                                    unit_tokens, decode_tokens,
+                                    dtype=compute_dtype)
         for step in range(decode_tokens):
             if self.sim:
                 scores = be.decode_scores(request_id, step)
@@ -470,8 +492,7 @@ class _EngineBase:
                 selected = select_topk_chunks(cs, self.budget)
                 per_layer = {l: selected for l in range(cfg.n_layers)}
             else:
-                per_layer = {l: np.asarray(resident.get(l, []), dtype=int)
-                             for l in range(cfg.n_layers)}
+                per_layer = res_layers
             trace.decode_selected.append(per_layer[0])
             # demand-fetch cache misses, then wait on in-flight transfers
             for l, units in per_layer.items():
@@ -493,34 +514,34 @@ class _EngineBase:
             attended = [len(per_layer[l]) * unit_tokens + suffix_len + step + 1
                         for l in range(cfg.n_layers)]
             cost = CM.decode_step_cost(cfg, attended)
+            ctx = None
             if self.sim:
                 fn = None
             else:
-                pools = {l: self._gather_unit_pages(l, units)
-                         for l, units in per_layer.items()}
                 pos = self.session.prefix_len + suffix_len + step
+                ctx = DecodeBatchCtx(backend=be, token=tok, pos=pos,
+                                     pools=pools)
 
                 def fn(tok_now=tok, pos=pos, pools=pools):
                     h = be.embed(np.array([tok_now]))
                     masses = {}
                     for l in range(cfg.n_layers):
-                        _, q, k_cur, v_cur = be.part_a(l, h, pos)
-                        h, masses[l] = be.decode_attend(
-                            l, h, q, pools[l][0], pools[l][1],
-                            kv_suffix.get(l), kv_dec[l], (k_cur, v_cur),
-                            unit_tokens)
-                        kv_dec[l].append((k_cur, v_cur))
+                        # traced positions: one jit entry for every step
+                        _, q, k_cur, v_cur = be.part_a_at(l, h, [[pos]])
+                        pools[l].append(k_cur, v_cur)
+                        h, masses[l] = be.decode_attend(l, h, q, pools[l])
                     return be.logits(h), masses
 
             out = yield ComputeOp(self._bound(request_id, fn) if fn else None,
                                   flops=cost.flops, hbm_bytes=cost.hbm_bytes,
                                   tag="decode", phase="decode",
                                   weight_bytes=weight_bytes, tokens=1,
-                                  weight_key="model")
+                                  weight_key="model", batch_ctx=ctx)
             masses = None
             if out is not None:
                 logits, masses = out
                 tok = int(np.argmax(logits[0, -1]))
+                trace.decode_tokens_out.append(tok)
             for l, units in per_layer.items():
                 if isinstance(self.cache, AttentionGuidedCache) and len(units):
                     if masses is not None:

@@ -64,6 +64,13 @@ class ComputeOp:
     for a single layer's prefill chunk.  Two ops share a weight stream only
     if their keys match or one of them streams the whole model — a batch of
     chunks from *different* layers must not pretend to share weights.
+
+    ``batch_ctx`` (real mode only) is the op's :class:`DecodeBatchCtx`: the
+    request-side handles a wall-clock driver needs to coalesce this decode
+    step with concurrent requests' steps into one batched kernel pass
+    (``backend.decode_step_batch``) instead of running ``fn`` alone.  ``fn``
+    stays the standalone single-request path, so drivers that ignore the
+    metadata (``drive_serial``) execute the plan unchanged.
     """
 
     fn: Optional[Callable]
@@ -74,6 +81,24 @@ class ComputeOp:
     weight_bytes: float = 0.0
     tokens: int = 0
     weight_key: str = ""
+    batch_ctx: Optional["DecodeBatchCtx"] = None
+
+
+@dataclasses.dataclass
+class DecodeBatchCtx:
+    """Batchable-op metadata for one real-mode decode ComputeOp.
+
+    ``backend`` is the shared :class:`repro.core.backends.RealCompute` (two
+    ops may only batch if they share one); ``token``/``pos`` are this step's
+    greedy-fed input token and absolute position; ``pools`` maps layer ->
+    :class:`repro.core.backends.TailPool`, the request's preallocated paged
+    KV pool the batched pass appends to and attends over.
+    """
+
+    backend: object
+    token: int
+    pos: int
+    pools: dict
 
 
 @dataclasses.dataclass

@@ -10,6 +10,15 @@ probability mass (the attention-guided cache's A_j signal): a running
 raw-mass scratch is rescaled by the same alpha as the softmax accumulator
 and normalized by the final denominator at the last grid step, so the
 engine no longer recomputes scores a second time to extract it.
+
+Ragged batches: requests with fewer active pages than the table width mark
+the pad slots with a negative table entry.  A pad page contributes exactly
+nothing — its scores are forced to NEG_INF before the online-softmax update
+(the gather index is clamped to 0, the loaded data is masked), so the
+accumulator, the denominator and the per-page masses of real pages are
+bit-identical to a call without the pad slots, and the pad slots' own mass
+is exactly zero.  `lengths` additionally masks the trailing partial page of
+the valid token stream, as before.
 """
 from __future__ import annotations
 
@@ -43,7 +52,8 @@ def _decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, mass_ref,
     s_mat = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
     pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
-    s_mat = jnp.where(pos < len_ref[b], s_mat, NEG_INF)
+    valid = (pos < len_ref[b]) & (tbl_ref[b, j] >= 0)
+    s_mat = jnp.where(valid, s_mat, NEG_INF)
 
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s_mat, axis=-1, keepdims=True))
@@ -68,7 +78,7 @@ def decode_attention(
     q: jax.Array,  # (b, n_q, d)
     k_pool: jax.Array,  # (b, n_pages, page, n_kv, d)
     v_pool: jax.Array,
-    page_table: jax.Array,  # (b, n_active) int32
+    page_table: jax.Array,  # (b, n_active) int32; < 0 marks a pad slot
     lengths: jax.Array,  # (b,) int32
     *,
     interpret: bool = False,
@@ -76,7 +86,8 @@ def decode_attention(
     """Returns (out (b, n_q, d), mass (b, n_q, n_active) fp32).
 
     ``mass[b, h, j]`` is the fraction of head ``h``'s attention probability
-    landing on active page ``j``; rows sum to 1 over the active pages.
+    landing on active page ``j``; rows sum to 1 over the valid pages while
+    pad slots (``page_table < 0``) carry exactly zero mass.
     """
     b, n_q, d = q.shape
     _, n_pages, page, n_kv, _ = k_pool.shape
@@ -92,14 +103,18 @@ def decode_attention(
         grid=(b * n_q, n_active),
         in_specs=[
             pl.BlockSpec((1, 1, d), lambda bh, j, tbl, ln, nh=n_q: (bh // nh, bh % nh, 0)),
+            # pad slots (table entry < 0) clamp their gather to page 0; the
+            # kernel masks the loaded data, so the page read is arbitrary
             pl.BlockSpec(
                 (1, 1, page, 1, d),
                 lambda bh, j, tbl, ln, nh=n_q, g=group: (
-                    bh // nh, tbl[bh // nh, j], 0, (bh % nh) // g, 0)),
+                    bh // nh, jnp.maximum(tbl[bh // nh, j], 0), 0,
+                    (bh % nh) // g, 0)),
             pl.BlockSpec(
                 (1, 1, page, 1, d),
                 lambda bh, j, tbl, ln, nh=n_q, g=group: (
-                    bh // nh, tbl[bh // nh, j], 0, (bh % nh) // g, 0)),
+                    bh // nh, jnp.maximum(tbl[bh // nh, j], 0), 0,
+                    (bh % nh) // g, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, d), lambda bh, j, tbl, ln, nh=n_q: (bh // nh, bh % nh, 0)),

@@ -19,7 +19,13 @@ def decode_attention(q, k_pool, v_pool, page_table, lengths, *, use_kernel=True)
 
     Returns (out, mass): the attention output and the per-page attention
     probability mass (b, n_q, n_active), so callers feeding the
-    attention-guided cache need not recompute scores."""
+    attention-guided cache need not recompute scores.
+
+    Ragged batches: requests whose pool has fewer than ``n_active`` pages pad
+    their table row with negative entries — pad slots are fully masked, carry
+    exactly zero mass, and leave the real pages' output bit-identical to an
+    unpadded call, so a fixed-capacity table keeps the call shape (and its
+    jit cache entry) stable while a request's tail grows."""
     if not use_kernel:
         return decode_attention_ref(q, k_pool, v_pool, page_table, lengths)
     return _kernel(q, k_pool, v_pool, page_table, lengths,

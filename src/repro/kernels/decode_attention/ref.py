@@ -11,18 +11,25 @@ def decode_attention_ref(
     q: jax.Array,  # (b, n_q, d) single-position queries
     k_pool: jax.Array,  # (b, n_pages, page, n_kv, d)
     v_pool: jax.Array,
-    page_table: jax.Array,  # (b, n_active) int32 logical->physical
+    page_table: jax.Array,  # (b, n_active) int32 logical->physical; < 0 = pad
     lengths: jax.Array,  # (b,) valid token count
 ):
-    """Returns (out (b, n_q, d), mass (b, n_q, n_active) fp32)."""
+    """Returns (out (b, n_q, d), mass (b, n_q, n_active) fp32).
+
+    Pad slots (``page_table < 0``, used to pack ragged batches to a common
+    ``n_active``) are masked entirely: their tokens never receive attention
+    and their per-page mass is exactly zero.
+    """
     b, n_q, d = q.shape
     _, n_pages, page, n_kv, _ = k_pool.shape
     n_active = page_table.shape[1]
     group = n_q // n_kv
     scale = d ** -0.5
 
-    k = jnp.take_along_axis(k_pool, page_table[:, :, None, None, None], axis=1)
-    v = jnp.take_along_axis(v_pool, page_table[:, :, None, None, None], axis=1)
+    page_valid = page_table >= 0  # (b, n_active)
+    tbl = jnp.maximum(page_table, 0)
+    k = jnp.take_along_axis(k_pool, tbl[:, :, None, None, None], axis=1)
+    v = jnp.take_along_axis(v_pool, tbl[:, :, None, None, None], axis=1)
     k = k.reshape(b, n_active * page, n_kv, d)
     v = v.reshape(b, n_active * page, n_kv, d)
 
@@ -30,6 +37,7 @@ def decode_attention_ref(
     logits = jnp.einsum("bngd,btnd->bngt", qg, k.astype(jnp.float32)) * scale
     pos = jnp.arange(n_active * page)
     mask = pos[None, :] < lengths[:, None]  # (b, T)
+    mask = mask & jnp.repeat(page_valid, page, axis=1)
     logits = jnp.where(mask[:, None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bngt,btnd->bngd", p.astype(v.dtype), v)

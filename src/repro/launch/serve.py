@@ -75,7 +75,9 @@ def _real_main(args):
                         decode_tokens=args.decode_tokens,
                         ttft_target=args.ttft_slo)
                 for rid, (suffix, _) in enumerate(task.queries)]
-    sched = Scheduler(eng, policy=args.policy, max_concurrency=args.concurrency)
+    sched = Scheduler(eng, policy=args.policy, max_concurrency=args.concurrency,
+                      batch_decode=not args.no_batch_decode,
+                      max_batch_tokens=args.max_batch_tokens)
     completed = sched.run(requests)
 
     correct = 0
@@ -98,6 +100,10 @@ def _real_main(args):
         print(f"decode: mean TPOT={s['mean_tpot']*1e3:.1f}ms "
               f"ITL p95={s['p95_itl']*1e3:.1f}ms "
               f"{s['decode_tok_rate']:.1f} tok/s")
+    if sched.real_batch_log:
+        sizes = [len(b) for b in sched.real_batch_log]
+        print(f"batched decode iterations: {len(sizes)} "
+              f"(mean b={np.mean(sizes):.2f}, max b={max(sizes)})")
     if args.decode_tokens == 0:
         # with decode, c.result is the *last* token's logits, not the label
         print(f"label-token accuracy (untrained model => chance-level): "
@@ -174,7 +180,8 @@ def main():
     p.add_argument("--ttft-slo", type=float, default=None,
                    help="per-request TTFT target in seconds (slo_aware policy)")
     p.add_argument("--no-batch-decode", action="store_true",
-                   help="disable continuous batching of decode steps (sim)")
+                   help="disable continuous batching of decode steps "
+                        "(sim pricing and real batched kernel passes)")
     p.add_argument("--prefill-chunk-tokens", type=int, default=None,
                    help="plan prefill as resumable chunks of this many "
                         "tokens (token-level prefill/decode mixing)")

@@ -15,7 +15,14 @@ Two drivers share the admission logic:
          queueing delay is part of TTFT;
   real — wall clock over RealExecutor; plans are cooperatively multiplexed,
          a plan blocked on a pending I/O future yields the driver to others
-         (arrival offsets are not simulated in real mode).
+         (arrival offsets are not simulated in real mode).  Each driver pass
+         is an iteration: runnable decode-phase ComputeOps of plans sharing
+         one backend coalesce into a single batched kernel call
+         (``backend.decode_step_batch`` over the requests' TailPools, ragged
+         page tables padded to a common width), while prefill and I/O ops
+         keep the cooperative round-robin; ``batch_decode=False`` disables
+         it and a lone decode step always runs the standalone path, keeping
+         concurrency-1 bit-identical to ``drive_serial``.
 
 Admission policies:
   fcfs        — strict arrival order;
@@ -162,7 +169,8 @@ POLICIES = {"fcfs": FCFSPolicy, "cache_aware": CacheAffinityPolicy,
 
 class _Active:
     __slots__ = ("request", "plan", "op", "resume", "admitted",
-                 "preempt_count", "swap_count", "swapped_bytes", "ttft_seen")
+                 "preempt_count", "swap_count", "swapped_bytes", "ttft_seen",
+                 "batch_stamp")
 
     def __init__(self, request: Request, plan: StepPlan, admitted: float):
         self.request = request
@@ -174,6 +182,7 @@ class _Active:
         self.swap_count = 0
         self.swapped_bytes = 0  # bytes swapped out, re-fetched on resume
         self.ttft_seen = False  # first token already fed the prefill EWMA
+        self.batch_stamp = -1  # last real-driver iteration this plan batched
 
 
 # ---------------------------------------------------------------------------
@@ -205,8 +214,10 @@ class Scheduler:
         self.max_concurrency = max_concurrency
         # token-level batching: coalesce runnable batchable ComputeOps
         # (decode tokens + chunk-granular prefill) of all active plans into
-        # one batched accelerator occupation per iteration (sim), capped at
-        # `max_batch_tokens` batch tokens (None = uncapped)
+        # one batched accelerator occupation per iteration — sim prices it
+        # through `compute_batch_at`, real runs one batched kernel pass per
+        # iteration — capped at `max_batch_tokens` batch tokens (None =
+        # uncapped)
         self.batch_decode = batch_decode
         self.max_batch_tokens = max_batch_tokens
         # SLO-driven preemption of decode plans (sim driver only)
@@ -224,6 +235,10 @@ class Scheduler:
         self._prefill_ewma: Optional[float] = None
         # per-iteration batch token counts (observability + property tests)
         self.batch_log: List[int] = []
+        # real driver: per-batch member digest [(request_id, phase,
+        # weight_key), ...] — the regression suite asserts batches never mix
+        # phases/weight streams and never run a request's op twice
+        self.real_batch_log: List[List[tuple]] = []
 
     def run(self, requests: Sequence[Request]) -> List[CompletedRequest]:
         requests = list(requests)
@@ -541,6 +556,77 @@ class Scheduler:
             self._finish_sim(a, clock.t, slots, done, stop.value)
 
     # -- wall-clock driver (real) ---------------------------------------------
+    def _real_decode_batch(self, active: List[_Active]) -> Optional[List[_Active]]:
+        """Assemble one real-mode batched decode iteration, or None.
+
+        Candidates are active plans whose pending op is a decode-phase
+        ComputeOp stamped with a :class:`DecodeBatchCtx` (real-mode decode
+        steps are always runnable — no time gating).  Members must share one
+        backend (one model's weights stream once for the whole batch).
+        ``max_batch_tokens`` caps the batch (decode ops carry ``tokens=1``).
+
+        Fairness: candidates are aged by the last iteration they batched
+        (``batch_stamp``), oldest first, both when choosing among backend
+        groups and when trimming to the token budget — a plan left out of
+        this iteration has the oldest stamp next time and joins then, so
+        trimming or a backend split never starves anyone.  A single
+        candidate returns None: it runs through the standalone ``op.fn``
+        path, which keeps concurrency-1 serving bit-identical to
+        ``drive_serial``.
+        """
+        if not self.batch_decode:
+            return None
+        cands = [a for a in active
+                 if isinstance(a.op, ComputeOp) and a.op.phase == "decode"
+                 and a.op.batch_ctx is not None]
+        if len(cands) < 2:
+            return None
+        cands.sort(key=lambda a: (a.batch_stamp, a.request.request_id))
+        groups: Dict[int, List[_Active]] = {}
+        for a in cands:
+            groups.setdefault(id(a.op.batch_ctx.backend), []).append(a)
+        # the group holding the longest-waiting candidate wins; group size
+        # breaks ties so throughput is preserved when nobody is starved
+        members = min(groups.values(),
+                      key=lambda g: (g[0].batch_stamp, -len(g),
+                                     g[0].request.request_id))
+        if self.max_batch_tokens is not None:
+            budget, trimmed = 0, []
+            for a in members:
+                if budget + a.op.tokens > self.max_batch_tokens:
+                    break
+                trimmed.append(a)
+                budget += a.op.tokens
+            members = trimmed
+        return members if len(members) >= 2 else None
+
+    def _step_real_batch(self, members: List[_Active], active, done):
+        """One batched decode kernel pass for `members` (same backend)."""
+        ex = self.ex
+        ctxs = [a.op.batch_ctx for a in members]
+        be = ctxs[0].backend
+        flops = sum(a.op.flops for a in members)
+        weight = max(a.op.weight_bytes for a in members)
+        hbm = weight + sum(a.op.hbm_bytes - a.op.weight_bytes for a in members)
+        outs = ex.compute(lambda: be.decode_step_batch(ctxs), flops=flops,
+                          hbm_bytes=hbm, tag=f"decode[x{len(members)}]")
+        stamp = len(self.real_batch_log)
+        for a in members:
+            a.batch_stamp = stamp
+        self.batch_log.append(sum(a.op.tokens for a in members))
+        self.real_batch_log.append(
+            [(a.request.request_id, a.op.phase, a.op.weight_key)
+             for a in members])
+        for a, send in zip(members, outs):
+            a.plan.clock.t = ex.now()
+            try:
+                a.op = a.plan.gen.send(send)
+            except StopIteration as stop:
+                active.remove(a)
+                done.append(CompletedRequest(a.request, a.plan.trace,
+                                             stop.value, a.admitted,
+                                             ex.now()))
+
     def _run_real(self, requests: List[Request]) -> List[CompletedRequest]:
         ex = self.ex
         pending = sorted(requests, key=lambda r: (r.arrival, r.request_id))
@@ -562,7 +648,23 @@ class Scheduler:
                     done.append(CompletedRequest(req, plan.trace, stop.value,
                                                  a.admitted, ex.now()))
             progressed = False
+            # iteration-level batching: coalesce runnable decode steps into
+            # one kernel pass; prefill/IO ops keep the cooperative
+            # round-robin below.  Candidates left out of this iteration's
+            # batch (backend mismatch, token budget) stay runnable and are
+            # skipped this pass so no plan advances twice per iteration.
+            members = self._real_decode_batch(active)
+            skip = set()
+            if members is not None:
+                self._step_real_batch(members, active, done)
+                progressed = True
+                skip = {id(a) for a in active
+                        if isinstance(a.op, ComputeOp)
+                        and a.op.phase == "decode"
+                        and a.op.batch_ctx is not None}
             for a in list(active):
+                if id(a) in skip:
+                    continue
                 op = a.op
                 if isinstance(op, WaitOp):
                     f = op.handle.future

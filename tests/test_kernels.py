@@ -168,6 +168,70 @@ class TestDecodeAttention:
         np.testing.assert_allclose(np.asarray(mass_g.sum(-1)),
                                    np.ones((b, nq)), rtol=1e-3)
 
+    # ragged-batch case table: per request (n_res resident pages, t_tail
+    # tail tokens); rows with fewer active pages pad their table with -1
+    RAGGED_CASES = [
+        # b=1 degenerate cases (the serving batch former's lone-plan path)
+        ("b1_partial_tail", 8, [(3, 5)]),
+        ("b1_exact_page", 8, [(2, 8)]),
+        # ragged b=2: second request needs pad pages
+        ("b2_ragged", 8, [(3, 5), (1, 17)]),
+        # b=3: a request with no resident pages, tails crossing boundaries
+        ("b3_no_resident", 4, [(0, 4), (5, 1), (2, 9)]),
+        # mostly-pad row next to an exact fill
+        ("b2_mostly_pad", 16, [(2, 16), (0, 3)]),
+    ]
+
+    @pytest.mark.parametrize("name,page,reqs",
+                             RAGGED_CASES, ids=[c[0] for c in RAGGED_CASES])
+    def test_ragged_batch_matches_ref(self, name, page, reqs):
+        """Kernel == oracle on ragged batches; pad slots (table -1) carry
+        exactly zero mass while valid pages' mass sums to ~1 per head."""
+        nq, nkv, d = 4, 2, 32
+        b = len(reqs)
+        n_active = [n_res + -(-t // page) for n_res, t in reqs]
+        width = max(n_active)
+        n_pages = width + 2  # physical pool larger than any table row
+        q = _rand(0, (b, nq, d), jnp.float32)
+        kp = _rand(1, (b, n_pages, page, nkv, d), jnp.float32)
+        vp = _rand(2, (b, n_pages, page, nkv, d), jnp.float32)
+        tbl = np.full((b, width), -1, np.int32)
+        lens = np.zeros(b, np.int32)
+        for i, (n_res, t) in enumerate(reqs):
+            tbl[i, : n_active[i]] = np.arange(n_active[i])
+            lens[i] = n_res * page + t
+        tbl, lens = jnp.asarray(tbl), jnp.asarray(lens)
+        got, mass_g = decode_attention(q, kp, vp, tbl, lens, interpret=True)
+        ref, mass_r = decode_attention_ref(q, kp, vp, tbl, lens)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(mass_g), np.asarray(mass_r),
+                                   rtol=3e-4, atol=3e-5)
+        mg = np.asarray(mass_g)
+        for i in range(b):
+            assert mg[i, :, n_active[i]:].max(initial=0.0) == 0.0, (
+                f"{name}: pad pages of request {i} carry mass")
+            np.testing.assert_allclose(mg[i, :, : n_active[i]].sum(-1),
+                                       np.ones(nq), rtol=1e-3)
+
+    def test_pad_slots_leave_valid_pages_bit_identical(self):
+        """Widening a table with -1 slots must not perturb the real pages —
+        the contract that lets TailPool keep a fixed-capacity table."""
+        nq, nkv, d, page, n_pages, n_act = 4, 2, 32, 8, 8, 3
+        q = _rand(0, (1, nq, d), jnp.float32)
+        kp = _rand(1, (1, n_pages, page, nkv, d), jnp.float32)
+        vp = _rand(2, (1, n_pages, page, nkv, d), jnp.float32)
+        lens = jnp.array([n_act * page - 2], jnp.int32)
+        tight = jnp.arange(n_act, dtype=jnp.int32)[None]
+        wide = jnp.concatenate(
+            [tight, jnp.full((1, 3), -1, jnp.int32)], axis=1)
+        out_t, mass_t = decode_attention(q, kp, vp, tight, lens, interpret=True)
+        out_w, mass_w = decode_attention(q, kp, vp, wide, lens, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_w))
+        np.testing.assert_array_equal(np.asarray(mass_t),
+                                      np.asarray(mass_w)[:, :, :n_act])
+        assert np.asarray(mass_w)[:, :, n_act:].max() == 0.0
+
     @given(n_act=st.integers(1, 8), valid_frac=st.floats(0.2, 1.0))
     @settings(max_examples=8, deadline=None)
     def test_length_mask_sweep(self, n_act, valid_frac):

@@ -11,12 +11,23 @@ spread) through the ContiguousKV sim scheduler must preserve:
   completeness   — every request finishes with its full decode budget.
 Runs with real hypothesis when installed, else the deterministic fallback in
 tests/_hypothesis_compat.py.
+
+The real (wall-clock) driver's batch former has its own invariants, checked
+on a tiny real model at the bottom of this file:
+  purity         — a batch never mixes phases or weight streams (decode
+                   steps only, ``weight_key="model"``);
+  membership     — every batch member was a runnable decode candidate at
+                   the iteration's start, and candidates left out stay
+                   runnable into a later iteration;
+  single fire    — no request's op executes twice in one iteration;
+  completeness   — every request decodes exactly its budget.
 """
 import numpy as np
 import pytest
 
 from tests._hypothesis_compat import given, settings, st
 
+from repro.core.stepplan import ComputeOp
 from repro.serving import Request, Scheduler, summarize
 from repro.serving.tenancy import build_sim_fleet
 
@@ -106,3 +117,120 @@ def test_unbudgeted_batches_log_tokens():
                                    decode_tokens=4, gap_ms=0.0)
     assert len(done) == 4
     assert sched.batch_log and max(sched.batch_log) >= 1
+
+
+# ---------------------------------------------------------------------------
+# real (wall-clock) driver properties
+# ---------------------------------------------------------------------------
+class _SpyScheduler(Scheduler):
+    """Records (runnable decode candidates, formed batch) per iteration."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.iteration_log = []
+
+    def _real_decode_batch(self, active):
+        cands = sorted(a.request.request_id for a in active
+                       if isinstance(a.op, ComputeOp)
+                       and a.op.phase == "decode"
+                       and a.op.batch_ctx is not None)
+        members = super()._real_decode_batch(active)
+        if cands:
+            self.iteration_log.append(
+                (cands, None if members is None
+                 else [m.request.request_id for m in members]))
+        return members
+
+
+N_REAL_REQ = 5
+REAL_DEC = 4
+
+
+@pytest.fixture(scope="module")
+def real_run():
+    """One batched real serving run through the spy scheduler."""
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.core import ContiguousKVEngine, build_real_session
+    from repro.core.backends import RealCompute
+    from repro.models import transformer as T
+    from repro.storage.timing import RealExecutor
+
+    cfg = reduced_config(MODEL, n_layers=2)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prefix = (np.arange(128) % cfg.vocab_size).astype(np.int64)
+    sess = build_real_session(cfg, params, prefix, chunk_tokens=16,
+                              in_memory=True)
+    eng = ContiguousKVEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                             budget=0.5, device_cap=64, host_cap=128)
+    # max_batch_tokens=3 < concurrency so the trim path is exercised too
+    sched = _SpyScheduler(eng, max_concurrency=4, max_batch_tokens=3)
+    reqs = [Request(request_id=i,
+                    suffix=(np.arange(24) + i) % cfg.vocab_size,
+                    decode_tokens=REAL_DEC) for i in range(N_REAL_REQ)]
+    return sched.run(reqs), sched
+
+
+def test_real_batches_never_mix_phases_or_weight_streams(real_run):
+    _, sched = real_run
+    assert sched.real_batch_log, "no real-mode batch formed"
+    for members in sched.real_batch_log:
+        assert all(phase == "decode" for _, phase, _ in members)
+        assert len({wk for _, _, wk in members}) == 1
+        assert all(wk == "model" for _, _, wk in members)
+
+
+def test_real_batch_members_fire_once_per_iteration(real_run):
+    _, sched = real_run
+    for members in sched.real_batch_log:
+        rids = [rid for rid, _, _ in members]
+        assert len(rids) == len(set(rids)), f"duplicate member in {rids}"
+
+
+def test_real_batches_respect_token_budget(real_run):
+    _, sched = real_run
+    assert all(len(m) <= 3 for m in sched.real_batch_log)
+    assert all(t <= 3 for t in sched.batch_log)
+
+
+def test_real_candidates_join_or_stay_runnable(real_run):
+    """Every runnable decode op at an iteration's start is either in that
+    iteration's batch or still a runnable candidate of a later one (the
+    round-robin skips it while a batch forms)."""
+    _, sched = real_run
+    log = sched.iteration_log
+    assert any(m for _, m in log)
+    for i, (cands, members) in enumerate(log):
+        if members is None:
+            continue
+        assert set(members) <= set(cands)
+        leftovers = set(cands) - set(members)
+        for rid in leftovers:
+            assert any(rid in later_cands for later_cands, _ in log[i + 1:]), (
+                f"request {rid} was skipped at iteration {i} and never "
+                f"became runnable again")
+
+
+def test_real_trimmed_candidates_lead_the_next_batch(real_run):
+    """Aging (batch_stamp rotation): a candidate the token budget left out
+    of one iteration is oldest next iteration, so it must be in the very
+    next batch it is still a candidate for — trimming never starves."""
+    _, sched = real_run
+    log = sched.iteration_log
+    for (c0, m0), (c1, m1) in zip(log, log[1:]):
+        if m0 is None or m1 is None:
+            continue
+        for rid in set(c0) - set(m0):
+            if rid in c1:
+                assert rid in m1, (
+                    f"request {rid} was trimmed out and then passed over "
+                    f"again: {m1} formed from {c1}")
+
+
+def test_real_every_request_completes_decode_budget(real_run):
+    done, _ = real_run
+    assert len(done) == N_REAL_REQ
+    for c in done:
+        assert len(c.trace.decode_times) == REAL_DEC
+        assert len(c.trace.decode_tokens_out) == REAL_DEC

@@ -160,6 +160,125 @@ def test_preempt_resume_round_trip_preserves_plan():
     assert got[1].ttft < base[1].ttft
 
 
+# ---------------------------------------------------------------------------
+# real driver: wall-clock scheduler vs drive_serial (tiny model, interpret
+# Pallas) — logits and greedy token streams are compared bit-for-bit, not
+# approximately; wall-clock times are deliberately ignored
+# ---------------------------------------------------------------------------
+REAL_PREFIX = 128
+REAL_SUFFIX = 24
+REAL_DECODE = 3
+
+
+@pytest.fixture(scope="module")
+def real_stack():
+    """Shared tiny model + ingested sessions (read-only across engines)."""
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.core import build_real_session
+    from repro.models import transformer as T
+
+    cfg = reduced_config(MODEL, n_layers=2)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prefix = (np.arange(REAL_PREFIX) % cfg.vocab_size).astype(np.int64)
+    sessions = {
+        False: build_real_session(cfg, params, prefix, chunk_tokens=16,
+                                  in_memory=True),
+        True: build_real_session(cfg, params, prefix, coarse_blocks=True,
+                                 in_memory=True),
+    }
+    return cfg, params, sessions
+
+
+def _real_engine(system, real_stack):
+    from repro.core.backends import RealCompute
+    from repro.storage.timing import RealExecutor
+
+    cfg, params, sessions = real_stack
+    sess = sessions[system != "contiguous_kv"]
+    kw = dict(device_cap=64, host_cap=128)
+    if system == "contiguous_kv":
+        kw.update(budget=0.5, period=2, subperiod=1)
+    elif system != "as_lru":
+        kw.update(budget=0.5)
+    return ENGINE_CLASSES[system](sess, RealCompute(cfg, params),
+                                  RealExecutor(), **kw)
+
+
+def _real_suffix(rid, cfg):
+    return (np.arange(REAL_SUFFIX) + 3 * rid) % cfg.vocab_size
+
+
+@pytest.fixture(scope="module")
+def real_serial_refs(real_stack):
+    """system -> [(logits, trace)] from drive_serial on a fresh engine."""
+    cfg = real_stack[0]
+    out = {}
+    for system in SYSTEMS:
+        eng = _real_engine(system, real_stack)
+        runs = []
+        for rid in range(2):
+            logits, tr = eng.reprefill(_real_suffix(rid, cfg), request_id=rid,
+                                       decode_tokens=REAL_DECODE)
+            runs.append((logits, tr))
+        out[system] = runs
+    return out
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_real_concurrency_one_bit_identical_to_serial(system, real_stack,
+                                                      real_serial_refs):
+    """Real-driver parity matrix: Scheduler(c=1) over the wall clock must
+    reproduce drive_serial's logits, greedy decode tokens and unit
+    selections bit-for-bit for every engine (TailPool decode included)."""
+    cfg = real_stack[0]
+    eng = _real_engine(system, real_stack)
+    sched = Scheduler(eng, max_concurrency=1)
+    reqs = [Request(request_id=rid, suffix=_real_suffix(rid, cfg),
+                    decode_tokens=REAL_DECODE) for rid in range(2)]
+    done = sched.run(reqs)
+    assert sched.real_batch_log == []  # a lone plan never enters the batcher
+    for rid, c in enumerate(done):
+        ref_logits, ref_tr = real_serial_refs[system][rid]
+        np.testing.assert_array_equal(np.asarray(c.result),
+                                      np.asarray(ref_logits),
+                                      err_msg=f"{system} req {rid} logits")
+        assert c.trace.decode_tokens_out == ref_tr.decode_tokens_out
+        assert set(c.trace.selected_per_layer) == set(ref_tr.selected_per_layer)
+        for l in ref_tr.selected_per_layer:
+            np.testing.assert_array_equal(c.trace.selected_per_layer[l],
+                                          ref_tr.selected_per_layer[l])
+        for got, ref in zip(c.trace.decode_selected, ref_tr.decode_selected):
+            np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("system", ["contiguous_kv", "as_lru"])
+def test_real_batched_decode_matches_unbatched(system, real_stack):
+    """Same requests at c=4 with and without the real batch former: greedy
+    token selections identical, final logits within 1e-5, and the batched
+    run actually formed multi-request decode iterations."""
+    cfg = real_stack[0]
+    runs = {}
+    for batched in (True, False):
+        eng = _real_engine(system, real_stack)
+        sched = Scheduler(eng, max_concurrency=4, batch_decode=batched)
+        reqs = [Request(request_id=rid, suffix=_real_suffix(rid, cfg),
+                        decode_tokens=REAL_DECODE) for rid in range(4)]
+        runs[batched] = (sched.run(reqs), sched)
+    done_b, sched_b = runs[True]
+    done_u, sched_u = runs[False]
+    assert sched_b.real_batch_log, "no batched decode iteration formed"
+    assert all(len(m) >= 2 for m in sched_b.real_batch_log)
+    assert sched_u.real_batch_log == []
+    for cb, cu in zip(done_b, done_u):
+        assert cb.trace.decode_tokens_out == cu.trace.decode_tokens_out, (
+            f"{system} req {cb.request.request_id} greedy tokens diverge")
+        np.testing.assert_allclose(np.asarray(cb.result),
+                                   np.asarray(cu.result), atol=1e-5,
+                                   err_msg=f"{system} req {cb.request.request_id}")
+
+
 @pytest.mark.parametrize("system", SYSTEMS)
 def test_concurrency_one_with_decode_prices_like_serial(system, serial_traces):
     """decode_tokens > 0 at concurrency 1: the batched path degenerates to

@@ -1,0 +1,200 @@
+"""TailPool equivalence: the preallocated paged tail == the old concat path.
+
+Before the TailPool refactor, real-mode ``decode_attend`` rebuilt its paged
+pool every step: concatenate [suffix KV, earlier decoded KV..., current KV],
+pad to a page multiple, reshape into pages, concatenate after the resident
+unit pages.  These tests replicate that retired assembly verbatim and prove
+the preallocated pool drives ``repro.kernels.decode_attention`` to
+*bit-identical* outputs over a multi-token decode — including page-boundary
+crossings, the ``kv_suffix is None`` path, and ragged batch packing — while
+the pool buffer itself never reallocates.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backends import TailPool, stack_tail_pools
+from repro.kernels.decode_attention.ops import decode_attention
+
+PAGE = 4
+N_KV = 2
+D = 16
+N_Q = 4
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return rng.normal(size=shape).astype(dtype)
+
+
+def _old_concat_pool(k_res, v_res, kv_suffix, kv_dec, kv_cur, page):
+    """The pre-TailPool pool assembly, replicated from engine PR 3."""
+    tail_k = [kv_cur[0]] if kv_suffix is None else [kv_suffix[0], kv_cur[0]]
+    tail_v = [kv_cur[1]] if kv_suffix is None else [kv_suffix[1], kv_cur[1]]
+    if kv_dec:
+        tail_k[-1:-1] = [k for k, _ in kv_dec]
+        tail_v[-1:-1] = [v for _, v in kv_dec]
+    tk = jnp.concatenate(tail_k, axis=1)[0]  # (t_tail, n_kv, d)
+    tv = jnp.concatenate(tail_v, axis=1)[0]
+    t_tail = tk.shape[0]
+    n_tail = -(-t_tail // page)
+    pad = n_tail * page - t_tail
+    if pad:
+        tk = jnp.pad(tk, ((0, pad), (0, 0), (0, 0)))
+        tv = jnp.pad(tv, ((0, pad), (0, 0), (0, 0)))
+    n_res = k_res.shape[0]
+    k_pool = jnp.concatenate(
+        [jnp.asarray(k_res, tk.dtype), tk.reshape(n_tail, page, N_KV, D)])[None]
+    v_pool = jnp.concatenate(
+        [jnp.asarray(v_res, tv.dtype), tv.reshape(n_tail, page, N_KV, D)])[None]
+    n_pages = n_res + n_tail
+    table = jnp.arange(n_pages, dtype=jnp.int32)[None]
+    lengths = jnp.array([n_res * page + t_tail], jnp.int32)
+    return k_pool, v_pool, table, lengths
+
+
+def _decode_scenario(seed, n_res, suffix_len, n_decode):
+    """Yields (step, q, old pool call args, pool) over a greedy decode."""
+    rng = np.random.default_rng(seed)
+    k_res = _rand(rng, (n_res, PAGE, N_KV, D), np.float16)
+    v_res = _rand(rng, (n_res, PAGE, N_KV, D), np.float16)
+    kv_suffix = None
+    if suffix_len:
+        kv_suffix = (_rand(rng, (1, suffix_len, N_KV, D)),
+                     _rand(rng, (1, suffix_len, N_KV, D)))
+    # kv_suffix=None: the compute dtype must be passed explicitly (the old
+    # concat path inherited it from the decoded KV itself)
+    pool = TailPool(k_res, v_res, kv_suffix, PAGE, n_decode,
+                    dtype=np.float32)
+    kv_dec = []
+    for step in range(n_decode):
+        kv_cur = (_rand(rng, (1, 1, N_KV, D)), _rand(rng, (1, 1, N_KV, D)))
+        q = jnp.asarray(_rand(rng, (1, N_Q, D)))
+        old = _old_concat_pool(k_res, v_res, kv_suffix, list(kv_dec), kv_cur,
+                               PAGE)
+        pool.append(kv_cur[0], kv_cur[1])
+        kv_dec.append(kv_cur)
+        yield step, q, old, pool
+
+
+class TestTailPoolEquivalence:
+    @pytest.mark.parametrize("n_res,suffix_len,n_decode", [
+        (2, 6, 7),   # tail crosses a page boundary mid-decode (6 -> 13 tok)
+        (3, 8, 5),   # suffix exactly fills two pages, decode opens a third
+        (2, 0, 6),   # kv_suffix is None: tail is decoded tokens only
+        (0, 5, 4),   # no resident pages at all
+    ])
+    def test_bit_identical_over_multi_token_decode(self, n_res, suffix_len,
+                                                   n_decode):
+        for step, q, old, pool in _decode_scenario(0, n_res, suffix_len,
+                                                   n_decode):
+            out_old, mass_old = decode_attention(q, *old)
+            k_pool = jnp.asarray(pool.k)[None]
+            v_pool = jnp.asarray(pool.v)[None]
+            table = jnp.asarray(pool.table())[None]
+            lengths = jnp.array([pool.valid_tokens], jnp.int32)
+            out_new, mass_new = decode_attention(q, k_pool, v_pool, table,
+                                                 lengths)
+            n_active = pool.n_active
+            assert int(old[3][0]) == pool.valid_tokens
+            assert old[2].shape[1] == n_active
+            np.testing.assert_array_equal(np.asarray(out_old),
+                                          np.asarray(out_new),
+                                          err_msg=f"step {step} out")
+            np.testing.assert_array_equal(
+                np.asarray(mass_old), np.asarray(mass_new)[:, :, :n_active],
+                err_msg=f"step {step} mass")
+            assert np.asarray(mass_new)[:, :, n_active:].max(initial=0.0) == 0.0
+
+    def test_old_path_lengths_match_token_accounting(self):
+        for _, _, old, pool in _decode_scenario(1, 2, 6, 5):
+            assert pool.valid_tokens == pool.n_res * PAGE + pool.t
+            assert pool.n_active == pool.n_res + -(-pool.t // PAGE)
+            assert int(old[3][0]) == pool.valid_tokens
+
+
+class TestTailPoolBuffer:
+    def test_buffers_never_reallocate(self):
+        """In-place contract: the page buffers keep their identity (and the
+        call shape its jit cache entry) across every append."""
+        rng = np.random.default_rng(2)
+        pool = TailPool(_rand(rng, (2, PAGE, N_KV, D), np.float16),
+                        _rand(rng, (2, PAGE, N_KV, D), np.float16),
+                        (_rand(rng, (1, 6, N_KV, D)),
+                         _rand(rng, (1, 6, N_KV, D))), PAGE, 6)
+        k_id, v_id = id(pool.k), id(pool.v)
+        shape = pool.k.shape
+        for _ in range(6):
+            pool.append(_rand(rng, (1, 1, N_KV, D)),
+                        _rand(rng, (1, 1, N_KV, D)))
+            assert id(pool.k) == k_id and id(pool.v) == v_id
+            assert pool.k.shape == shape
+            assert pool.table().shape == (shape[0],)
+
+    def test_overflow_raises(self):
+        rng = np.random.default_rng(3)
+        pool = TailPool(np.zeros((1, PAGE, N_KV, D), np.float16),
+                        np.zeros((1, PAGE, N_KV, D), np.float16),
+                        None, PAGE, 2)
+        tok = (_rand(rng, (1, 1, N_KV, D)), _rand(rng, (1, 1, N_KV, D)))
+        cap = pool.cap_pages * PAGE
+        for _ in range(cap):
+            pool.append(*tok)
+        with pytest.raises(ValueError, match="overflow"):
+            pool.append(*tok)
+
+    def test_suffix_paged_once_at_construction(self):
+        rng = np.random.default_rng(4)
+        suf_k = _rand(rng, (1, 7, N_KV, D))
+        suf_v = _rand(rng, (1, 7, N_KV, D))
+        pool = TailPool(np.zeros((0, PAGE, N_KV, D), np.float16),
+                        np.zeros((0, PAGE, N_KV, D), np.float16),
+                        (suf_k, suf_v), PAGE, 3)
+        assert pool.t == 7 and pool.n_res == 0
+        flat = pool.k.reshape(-1, N_KV, D)
+        np.testing.assert_array_equal(flat[:7], suf_k[0])
+        assert np.all(flat[7:] == 0)
+
+
+class TestStackTailPools:
+    def test_ragged_pack_pads_tables_and_masks(self):
+        rng = np.random.default_rng(5)
+
+        def mk(n_res, s, extra, written):
+            pool = TailPool(_rand(rng, (n_res, PAGE, N_KV, D), np.float16),
+                            _rand(rng, (n_res, PAGE, N_KV, D), np.float16),
+                            (_rand(rng, (1, s, N_KV, D)),
+                             _rand(rng, (1, s, N_KV, D))) if s else None,
+                            PAGE, extra, dtype=np.float32)
+            for _ in range(written):
+                pool.append(_rand(rng, (1, 1, N_KV, D)),
+                            _rand(rng, (1, 1, N_KV, D)))
+            return pool
+
+        pools = [mk(3, 6, 8, 2), mk(1, 0, 3, 1)]
+        k, v, table, lengths = stack_tail_pools(pools)
+        assert k.shape[0] == 2 and k.shape[0] == v.shape[0]
+        width = max(p.n_res + p.cap_pages for p in pools)
+        assert table.shape == (2, width)
+        for i, p in enumerate(pools):
+            assert lengths[i] == p.valid_tokens
+            np.testing.assert_array_equal(table[i, : p.n_active],
+                                          np.arange(p.n_active))
+            assert np.all(table[i, p.n_active:] == -1)
+            np.testing.assert_array_equal(k[i, : p.k.shape[0]], p.k)
+        # batched call == per-request calls, request by request
+        q = jnp.asarray(_rand(rng, (2, N_Q, D)))
+        out_b, mass_b = decode_attention(q, jnp.asarray(k), jnp.asarray(v),
+                                         jnp.asarray(table),
+                                         jnp.asarray(lengths))
+        for i, p in enumerate(pools):
+            out_1, mass_1 = decode_attention(
+                q[i: i + 1], jnp.asarray(p.k)[None], jnp.asarray(p.v)[None],
+                jnp.asarray(p.table())[None],
+                jnp.array([p.valid_tokens], jnp.int32))
+            np.testing.assert_allclose(np.asarray(out_1[0]),
+                                       np.asarray(out_b[i]),
+                                       rtol=2e-6, atol=2e-6)
+            np.testing.assert_allclose(
+                np.asarray(mass_1[0]),
+                np.asarray(mass_b[i])[:, : p.n_res + p.cap_pages],
+                rtol=2e-5, atol=2e-6)
