@@ -4,50 +4,75 @@
 # single-device containers; run `make verify-core` for the gate that must
 # stay green everywhere.
 #
-# CI splits the gate in two (see .github/workflows/ci.yml):
-#   verify-core-tests — everything except the serving-regression suite;
-#   verify-serving    — parity + property + golden tests and the serving
-#                       throughput benchmark with its decode/mixed gates.
+# CI splits the gate in four (see .github/workflows/ci.yml):
+#   verify-core-tests — everything except the serving-regression suite and
+#                       the kernel/pool suite (each has its own job);
+#   verify-kernels    — TailPool/DeviceTailPool equivalence + the ragged
+#                       decode_attention kernel sweep (fast inner loop);
+#   verify-serving-tests — parity + property + golden tests (the serving
+#                       benchmark with its decode/mixed gates runs once in
+#                       CI, inside bench-trend; local `verify-serving`
+#                       still runs both);
+#   bench-trend       — the serving throughput benchmark (all of its
+#                       acceptance asserts) + its JSON vs the committed
+#                       baseline (benchmarks/check_trend.py regression
+#                       gate).
 
 PY := python
 export PYTHONPATH := src
 
 # test_serving_parity.py / test_mixed_batch_props.py include the real-mode
 # (wall-clock, interpret-Pallas) regression tests: the c=1 bit-parity matrix
-# vs drive_serial and the real batch-former properties
+# vs drive_serial, the real batch-former properties and the real
+# preempt->resume round trip
 SERVING_TESTS := tests/test_serving.py tests/test_serving_parity.py \
 	tests/test_channelsim_props.py tests/test_mixed_batch_props.py \
 	tests/test_golden_trace.py tests/test_decode.py
 
-# run by verify-core-tests (not part of the serving suite): the TailPool
-# equivalence tests and the decode_attention ragged-batch kernel sweep
-KERNEL_TESTS := tests/test_kernels.py tests/test_tail_pool.py
+# the verify-kernels suite (its own CI job; ignored by verify-core-tests so
+# nothing runs twice): TailPool/DeviceTailPool equivalence tests, the
+# device-pool no-reupload/swap tests, and the decode_attention ragged-batch
+# kernel sweep
+KERNEL_TESTS := tests/test_kernels.py tests/test_tail_pool.py \
+	tests/test_device_pool.py
 
-.PHONY: verify verify-core verify-core-tests verify-kernels verify-serving test bench-throughput
+.PHONY: verify verify-core verify-core-tests verify-kernels verify-serving \
+	verify-serving-tests test bench-throughput bench-baseline bench-trend
 
 verify: test bench-throughput
 
 test:
 	$(PY) -m pytest -x -q
 
-verify-core: verify-core-tests verify-serving
+verify-core: verify-core-tests verify-kernels verify-serving
 
-# full-tree discovery: picks up $(KERNEL_TESTS) (TailPool + ragged decode
-# kernel sweep) along with everything outside the serving suite
+# full-tree discovery minus the suites owned by the other jobs
 verify-core-tests:
 	$(PY) -m pytest -q --durations=15 \
 		--deselect tests/test_sharded_sparse.py \
 		--deselect tests/test_sharding_small.py \
 		--deselect tests/test_checkpoint.py::TestCheckpoint::test_elastic_restore_onto_different_mesh \
-		$(addprefix --ignore=,$(SERVING_TESTS))
+		$(addprefix --ignore=,$(SERVING_TESTS)) \
+		$(addprefix --ignore=,$(KERNEL_TESTS))
 
-# fast inner loop for kernel / TailPool work
+# fast inner loop for kernel / TailPool / DeviceTailPool work
 verify-kernels:
 	$(PY) -m pytest -q --durations=15 $(KERNEL_TESTS)
 
-verify-serving:
+verify-serving-tests:
 	$(PY) -m pytest -q --durations=15 $(SERVING_TESTS)
+
+verify-serving: verify-serving-tests
 	$(PY) benchmarks/bench_throughput.py --quick
 
 bench-throughput:
 	$(PY) benchmarks/bench_throughput.py --quick
+
+# refresh the committed benchmark baseline after an intentional perf change
+bench-baseline:
+	$(PY) benchmarks/bench_throughput.py --quick --json benchmarks/baseline.json
+
+# what the bench-trend CI job runs: fresh JSON + regression gate vs baseline
+bench-trend:
+	$(PY) benchmarks/bench_throughput.py --quick --json benchmarks/out/bench_ci.json
+	$(PY) benchmarks/check_trend.py benchmarks/out/bench_ci.json

@@ -1,0 +1,112 @@
+"""Benchmark-trend gate: fail CI when a pinned metric regresses vs baseline.
+
+Compares a fresh ``bench_throughput --json`` dump against the committed
+``benchmarks/baseline.json`` and exits non-zero when any gated metric fell
+by more than ``--max-regression`` (relative).  The default gate pins the
+real-mode decode token rates — the metric the device-resident TailPool
+exists to protect — plus the machine-independent speedup ratios, which
+stay comparable across runner generations where absolute tok/s does not.
+If CI moves to a different runner class, expect the absolute-rate gates to
+trip once: refresh the baseline from that run's uploaded
+``bench_ci.json`` artifact (or ``make bench-baseline`` on the new class)
+and commit it.
+
+Usage (what the ``bench-trend`` CI job runs):
+
+    PYTHONPATH=src python benchmarks/bench_throughput.py --quick \
+        --json benchmarks/out/bench_ci.json
+    python benchmarks/check_trend.py benchmarks/out/bench_ci.json
+
+Refresh the baseline after an intentional perf change:
+
+    make bench-baseline   # rewrites benchmarks/baseline.json; commit it
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+
+DEFAULT_BASELINE = "benchmarks/baseline.json"
+# gated metrics: higher is better for every pattern here.  Serve-level
+# rates for the batched/unbatched real configs are stable run-to-run; the
+# host-pool serve rate is deliberately ungated (its decode region is the
+# noisiest of the three — the device-vs-host comparison is gated inside the
+# benchmark itself on interleaved medians + exact H2D byte accounting)
+DEFAULT_PATTERNS = (
+    "serving/real/decode*/c*/batched/decode_tok_rate",
+    "serving/real/decode*/c*/unbatched/decode_tok_rate",
+    "serving/real/decode*/c*/batched_tok_rate_speedup",
+    "serving/real/pool_cap*/c1/device_pool_step_speedup",
+    "serving/*/batched_makespan_speedup",
+)
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    rows = payload.get("rows", payload)
+    return {name: float(rec["value"] if isinstance(rec, dict) else rec)
+            for name, rec in rows.items()}
+
+
+def compare(current: dict, baseline: dict, patterns, max_regression: float):
+    """Returns (checked, failures): failures are (name, base, cur, drop)."""
+    checked, failures = [], []
+    for name in sorted(baseline):
+        if not any(fnmatch.fnmatch(name, p) for p in patterns):
+            continue
+        base = baseline[name]
+        if name not in current:
+            failures.append((name, base, None, None))
+            continue
+        cur = current[name]
+        drop = 0.0 if base <= 0 else (base - cur) / base
+        checked.append((name, base, cur, drop))
+        if drop > max_regression:
+            failures.append((name, base, cur, drop))
+    return checked, failures
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("current", help="fresh bench JSON (bench_throughput --json)")
+    p.add_argument("--baseline", default=DEFAULT_BASELINE)
+    p.add_argument("--max-regression", type=float, default=0.20,
+                   help="max tolerated relative drop vs baseline "
+                        "(default 0.20 = 20%%)")
+    p.add_argument("--pattern", action="append", default=None,
+                   help="glob over metric names to gate (repeatable); "
+                        f"default: {', '.join(DEFAULT_PATTERNS)}")
+    args = p.parse_args(argv)
+    patterns = args.pattern or list(DEFAULT_PATTERNS)
+
+    current = _rows(args.current)
+    baseline = _rows(args.baseline)
+    checked, failures = compare(current, baseline, patterns,
+                                args.max_regression)
+    if not checked and not failures:
+        print(f"check_trend: no baseline metric matches {patterns}")
+        return 2
+    for name, base, cur, drop in checked:
+        mark = "REGRESSED" if drop > args.max_regression else "ok"
+        print(f"{mark:9s} {name}: baseline={base:.4g} current={cur:.4g} "
+              f"({-drop:+.1%})")
+    for name, base, cur, drop in failures:
+        if cur is None:
+            print(f"MISSING   {name}: in baseline ({base:.4g}) but absent "
+                  f"from the current run")
+    if failures:
+        print(f"check_trend: {len(failures)} gated metric(s) regressed more "
+              f"than {args.max_regression:.0%} (or went missing) — if the "
+              f"change is intentional, refresh with `make bench-baseline` "
+              f"and commit benchmarks/baseline.json")
+        return 1
+    print(f"check_trend: {len(checked)} gated metric(s) within "
+          f"{args.max_regression:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

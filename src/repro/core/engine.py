@@ -45,7 +45,7 @@ from repro.core.importance import (
 )
 from repro.core.periods import PeriodSchedule
 from repro.core.sparse_attention import bucket_size
-from repro.core.backends import TailPool
+from repro.core.backends import DeviceTailPool, TailPool
 from repro.core.stepplan import (
     ComputeOp,
     DecodeBatchCtx,
@@ -159,6 +159,7 @@ class _EngineBase:
         *,
         budget: float = 0.25,
         prefill_chunk_tokens: Optional[int] = None,
+        device_tail_pool: bool = True,
         suffix_flops_attended=None,
     ):
         self.session = session
@@ -172,6 +173,10 @@ class _EngineBase:
         # keeps the monolithic per-layer op — bit-identical to the
         # pre-chunking plans.
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        # real mode: decode-phase KV pools live in device memory (one upload
+        # at decode start, in-place donated writes per token) unless the
+        # host-resident PR-4 path is forced for comparison/debugging
+        self.device_tail_pool = device_tail_pool
         self.cfg = session.cfg
         self.sim = isinstance(executor, ChannelSim)
         self.tenant = session.tenant
@@ -448,12 +453,19 @@ class _EngineBase:
                costmodel-priced ComputeOp a scheduler may batch with other
                requests' decode steps;
         real — sparse decode attention (repro.kernels.decode_attention) over
-               a preallocated per-layer :class:`TailPool` built once at
-               decode start (resident unit pages + suffix KV paged in, each
-               decoded token's KV written into its page slot in place);
-               greedy next-token feedback.  Each decode ComputeOp carries a
-               :class:`DecodeBatchCtx` so a wall-clock driver can coalesce
-               concurrent requests' steps into one batched kernel pass.
+               a preallocated per-layer pool built once at decode start
+               (resident unit pages + suffix KV paged in, each decoded
+               token's KV written into its page slot in place); greedy
+               next-token feedback.  By default the pool is a
+               :class:`DeviceTailPool` — device-resident ``jax.Array``
+               buffers uploaded once and updated in place by a donated
+               ``dynamic_update_slice``, so decode steps move zero pool
+               bytes over H2D; ``device_tail_pool=False`` forces the
+               host-resident PR-4 :class:`TailPool` (re-uploaded per step).
+               Each decode ComputeOp carries a :class:`DecodeBatchCtx` so a
+               wall-clock driver can coalesce concurrent requests' steps
+               into one batched kernel pass, and the scheduler can swap the
+               pools out/in around an SLO preemption.
 
         Both modes refresh the attention-guided cache from decode-time
         scores (Eq. 2 keeps accumulating past the first token).
@@ -477,9 +489,10 @@ class _EngineBase:
             # back to the fp16 storage dtype for its decoded tail
             compute_dtype = next(
                 (np.dtype(kv[0].dtype) for kv in kv_suffix.values()), None)
+            pool_cls = DeviceTailPool if self.device_tail_pool else TailPool
             for l in range(cfg.n_layers):
                 k_res, v_res = self._gather_unit_pages(l, res_layers[l])
-                pools[l] = TailPool(k_res, v_res, kv_suffix.get(l),
+                pools[l] = pool_cls(k_res, v_res, kv_suffix.get(l),
                                     unit_tokens, decode_tokens,
                                     dtype=compute_dtype)
         for step in range(decode_tokens):
@@ -564,10 +577,12 @@ class ContiguousKVEngine(_EngineBase):
     def __init__(self, session, backend, executor, cache=None, *, budget=0.25,
                  period: int = 8, subperiod: int = 4, prefetch: bool = True,
                  inter_period: bool = True, device_cap: int = 0, host_cap: int = 0,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 device_tail_pool: bool = True):
         cache = cache if cache is not None else AttentionGuidedCache(device_cap, host_cap)
         super().__init__(session, backend, executor, cache, budget=budget,
-                         prefill_chunk_tokens=prefill_chunk_tokens)
+                         prefill_chunk_tokens=prefill_chunk_tokens,
+                         device_tail_pool=device_tail_pool)
         self.schedule = PeriodSchedule(self.cfg.n_layers, period, subperiod)
         self.prefetch = prefetch
         self.inter_period = inter_period and prefetch
@@ -787,11 +802,13 @@ class ASLRUEngine(_BlockBaselineEngine):
     select_tokens = False
 
     def __init__(self, session, backend, executor, *, device_cap=0, host_cap=0,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 device_tail_pool: bool = True):
         # Full-prefix streaming: the budget is 1.0 by construction.
         super().__init__(session, backend, executor,
                          LRUCache(device_cap, host_cap), budget=1.0,
-                         prefill_chunk_tokens=prefill_chunk_tokens)
+                         prefill_chunk_tokens=prefill_chunk_tokens,
+                         device_tail_pool=device_tail_pool)
 
     def _gather_tokens(self, layer, tokens, blocks):
         """Full-prefix attention: gather whole blocks as chunk units."""
@@ -862,10 +879,12 @@ class ASH2OEngine(_BlockBaselineEngine):
 
     def __init__(self, session, backend, executor, *, budget=0.25,
                  device_cap=0, host_cap=0,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 device_tail_pool: bool = True):
         super().__init__(session, backend, executor,
                          LFUCache(device_cap, host_cap), budget=budget,
-                         prefill_chunk_tokens=prefill_chunk_tokens)
+                         prefill_chunk_tokens=prefill_chunk_tokens,
+                         device_tail_pool=device_tail_pool)
 
 
 class IMPRESSEngine(_BlockBaselineEngine):
@@ -876,7 +895,9 @@ class IMPRESSEngine(_BlockBaselineEngine):
 
     def __init__(self, session, backend, executor, *, budget=0.25,
                  device_cap=0, host_cap=0,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 device_tail_pool: bool = True):
         super().__init__(session, backend, executor,
                          ImpressScoreCache(device_cap, host_cap), budget=budget,
-                         prefill_chunk_tokens=prefill_chunk_tokens)
+                         prefill_chunk_tokens=prefill_chunk_tokens,
+                         device_tail_pool=device_tail_pool)

@@ -91,8 +91,14 @@ class DecodeBatchCtx:
     ``backend`` is the shared :class:`repro.core.backends.RealCompute` (two
     ops may only batch if they share one); ``token``/``pos`` are this step's
     greedy-fed input token and absolute position; ``pools`` maps layer ->
-    :class:`repro.core.backends.TailPool`, the request's preallocated paged
-    KV pool the batched pass appends to and attends over.
+    the request's preallocated paged KV pool the batched pass appends to and
+    attends over — a device-resident
+    :class:`repro.core.backends.DeviceTailPool` by default (host
+    :class:`~repro.core.backends.TailPool` when the engine was built with
+    ``device_tail_pool=False``).  ``pools`` is also the preemption surface:
+    the real scheduler snapshots the pools to host (``swap_out``) when it
+    evicts this plan under SLO pressure and restores them (``swap_in``)
+    before the held op resumes.
     """
 
     backend: object

@@ -23,9 +23,13 @@ digest adds mean TPOT / inter-token P50/P95 / decode token throughput.
 ``--prefill-chunk-tokens C`` plans prefill as resumable C-token chunks that
 the sim scheduler mixes into decode iterations (token-level continuous
 batching); ``--max-batch-tokens B`` caps each iteration's batch tokens.
-``--preempt`` enables SLO-driven preemption of decode plans (sim; add
-``--swap-on-preempt`` to also swap the victim's resident units out and back
-through the PCIe cost model).
+``--preempt`` enables SLO-driven preemption of decode plans in both modes;
+with ``--swap-on-preempt`` the victim's state is swapped out and restored on
+resume — priced through the PCIe cost model in sim, actual D2H/H2D
+round-trips of the victim's device-resident TailPools in real mode (the
+digest prints preemption/swap counts and bytes either way).
+``--host-tail-pool`` forces the PR-4 host-resident decode pools in real mode
+(per-step H2D re-upload) for comparison/debugging.
 """
 from __future__ import annotations
 
@@ -64,7 +68,8 @@ def _real_main(args):
                               coarse_blocks=coarse, in_memory=True)
     ex = RealExecutor()
     kw = dict(device_cap=64, host_cap=128,
-              prefill_chunk_tokens=args.prefill_chunk_tokens)
+              prefill_chunk_tokens=args.prefill_chunk_tokens,
+              device_tail_pool=not args.host_tail_pool)
     if args.system == "contiguous_kv":
         kw.update(budget=args.budget, period=args.period, subperiod=args.subperiod)
     elif args.system != "as_lru":
@@ -77,7 +82,10 @@ def _real_main(args):
                 for rid, (suffix, _) in enumerate(task.queries)]
     sched = Scheduler(eng, policy=args.policy, max_concurrency=args.concurrency,
                       batch_decode=not args.no_batch_decode,
-                      max_batch_tokens=args.max_batch_tokens)
+                      max_batch_tokens=args.max_batch_tokens,
+                      preempt=args.preempt,
+                      swap_on_preempt=args.swap_on_preempt,
+                      prefill_estimate=args.prefill_estimate)
     completed = sched.run(requests)
 
     correct = 0
@@ -104,6 +112,10 @@ def _real_main(args):
         sizes = [len(b) for b in sched.real_batch_log]
         print(f"batched decode iterations: {len(sizes)} "
               f"(mean b={np.mean(sizes):.2f}, max b={max(sizes)})")
+    if args.preempt:
+        pools = "host" if args.host_tail_pool else "device"
+        print(f"preemptions={s['preemptions']} swaps={s['swaps']} "
+              f"swap_bytes={sched.swap_bytes/1e6:.2f}MB ({pools} tail pools)")
     if args.decode_tokens == 0:
         # with decode, c.result is the *last* token's logits, not the label
         print(f"label-token accuracy (untrained model => chance-level): "
@@ -188,9 +200,14 @@ def main():
     p.add_argument("--max-batch-tokens", type=int, default=None,
                    help="token budget of one batched iteration (sim)")
     p.add_argument("--preempt", action="store_true",
-                   help="SLO-driven preemption of decode plans (sim)")
+                   help="SLO-driven preemption of decode plans (sim + real)")
     p.add_argument("--swap-on-preempt", action="store_true",
-                   help="swap the victim's resident units out/in over PCIe")
+                   help="swap the victim's state out/in: PCIe cost model in "
+                        "sim, real TailPool D2H/H2D snapshots in real mode")
+    p.add_argument("--host-tail-pool", action="store_true",
+                   help="real mode: use the host-resident PR-4 TailPool "
+                        "(per-step pool re-upload) instead of the "
+                        "device-resident default")
     p.add_argument("--prefill-estimate", type=float, default=None,
                    help="floor (seconds) for the projected prefill service "
                         "time; the first-token EWMA raises it")

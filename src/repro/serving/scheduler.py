@@ -40,14 +40,17 @@ mixing of prefill and decode: FLOPs and per-request KV traffic sum, the
 weight stream is paid once, and each iteration is capped at
 ``max_batch_tokens`` batch tokens.  Disable with ``batch_decode=False``.
 
-SLO-driven preemption (``preempt=True``, sim driver): when the
+SLO-driven preemption (``preempt=True``, both drivers): when the
 earliest-deadline queued request projects a TTFT miss (its deadline is ahead
 of the next scheduling event plus an EWMA estimate of prefill service time),
 the scheduler preempts an active decode-phase plan at its step boundary and
 admits the urgent request into the freed slot.  With ``swap_on_preempt`` the
-victim's cache-resident units are swapped out over the PCIe channel and
-re-fetched when the plan resumes, both priced through the device model.
-Preempted plans resume with priority as soon as a slot frees.
+victim's state is swapped out and restored on resume — in sim the
+cache-resident units are priced over the PCIe channel through the device
+model; in real mode the victim's device-resident TailPools are snapshotted
+back to host memory (actual D2H/H2D transfers, bytes accounted) and the
+resumed decode is bit-identical to an uninterrupted run.  Preempted plans
+resume with priority as soon as a slot frees.
 """
 from __future__ import annotations
 
@@ -220,7 +223,7 @@ class Scheduler:
         # uncapped)
         self.batch_decode = batch_decode
         self.max_batch_tokens = max_batch_tokens
-        # SLO-driven preemption of decode plans (sim driver only)
+        # SLO-driven preemption of decode plans (sim + real drivers)
         self.preempt = preempt
         self.swap_on_preempt = swap_on_preempt
         self.preemptions = 0
@@ -452,6 +455,35 @@ class Scheduler:
             start = max(req.arrival, heapq.heappop(slots))
             self._start_plan(req, start, active, slots, done)
 
+    def _select_preemption(self, pending, active, now, *, arrived_only):
+        """Shared §6 preemption policy for both drivers.
+
+        ``now`` is the next scheduling event (sim) or the wall clock
+        relative to the run start (real).  Picks the earliest-deadline
+        queued request with a TTFT target (``arrived_only`` additionally
+        gates on ``arrival <= now`` — sim respects arrival offsets, the
+        real driver does not simulate them), projects its miss
+        (``now + prefill_estimate > deadline``) and selects the
+        decode-phase victim with the farthest, strictly-later deadline.
+        Returns (urgent, victim) or None — the drivers own the mechanics
+        (slot handoff, swap pricing vs real pool snapshots)."""
+        urgent_pool = [r for r in pending if r.ttft_target is not None
+                       and (not arrived_only or r.arrival <= now)]
+        if not urgent_pool:
+            return None
+        urgent = min(urgent_pool,
+                     key=lambda r: (_deadline(r), r.arrival, r.request_id))
+        if max(urgent.arrival, now) + self._prefill_est <= _deadline(urgent):
+            return None  # no projected miss
+        victims = [a for a in active
+                   if isinstance(a.op, ComputeOp) and a.op.phase == "decode"
+                   and _deadline(a.request) > _deadline(urgent)]
+        if not victims:
+            return None
+        v = max(victims, key=lambda a: (_deadline(a.request), a.admitted,
+                                        a.request.request_id))
+        return urgent, v
+
     def _preempt_sim(self, pending, active, preempted, slots, done):
         """SLO-driven preemption: evict a decode plan at its step boundary.
 
@@ -467,22 +499,11 @@ class Scheduler:
                 and len(active) >= self.max_concurrency):
             return
         t_next = min(a.resume for a in active)
-        urgent_pool = [r for r in pending
-                       if r.ttft_target is not None and r.arrival <= t_next]
-        if not urgent_pool:
+        sel = self._select_preemption(pending, active, t_next,
+                                      arrived_only=True)
+        if sel is None:
             return
-        urgent = min(urgent_pool,
-                     key=lambda r: (_deadline(r), r.arrival, r.request_id))
-        est = self._prefill_est
-        if max(urgent.arrival, t_next) + est <= _deadline(urgent):
-            return  # no projected miss
-        victims = [a for a in active
-                   if isinstance(a.op, ComputeOp) and a.op.phase == "decode"
-                   and _deadline(a.request) > _deadline(urgent)]
-        if not victims:
-            return
-        v = max(victims, key=lambda a: (_deadline(a.request), a.admitted,
-                                        a.request.request_id))
+        urgent, v = sel
         active.remove(v)
         v.preempt_count += 1
         self.preemptions += 1
@@ -556,6 +577,78 @@ class Scheduler:
             self._finish_sim(a, clock.t, slots, done, stop.value)
 
     # -- wall-clock driver (real) ---------------------------------------------
+    def _finish_real(self, a: _Active, done, value):
+        """Record one wall-clock completion (the _finish_sim counterpart)."""
+        self._observe_ttft(a)
+        done.append(CompletedRequest(a.request, a.plan.trace, value,
+                                     a.admitted, self.ex.now(),
+                                     preemptions=a.preempt_count,
+                                     swaps=a.swap_count))
+
+    def _start_real(self, req: Request, active, done):
+        """Build one plan and admit it into the wall-clock driver."""
+        ex = self.ex
+        eng = self.engines[req.tenant]
+        plan = eng.plan(req.suffix, req.request_id,
+                        decode_tokens=req.decode_tokens)
+        plan.clock.t = ex.now()
+        a = _Active(req, plan, plan.clock.t)
+        try:
+            a.op = plan.gen.send(None)
+            active.append(a)
+        except StopIteration as stop:
+            self._finish_real(a, done, stop.value)
+
+    def _preempt_real(self, pending, active, preempted, t0: float, done):
+        """SLO-driven preemption for the wall-clock driver.
+
+        Mirrors ``_preempt_sim``: when every slot is busy and the
+        earliest-deadline queued request projects a TTFT miss (wall clock
+        now, relative to the run start, plus the prefill-service estimate
+        overruns ``arrival + ttft_target``), the decode-phase plan with the
+        farthest deadline is preempted at its step boundary — its pending op
+        is simply held, which is safe because decode plans are resumable by
+        construction.  With ``swap_on_preempt`` the victim's per-layer
+        TailPools are snapshotted back to host memory (``pool.swap_out()``;
+        a device-resident pool's buffers actually leave the device, so the
+        freed slot's KV no longer occupies device memory) and restored
+        bit-identically on resume.  Swap bytes are accounted on both legs,
+        exactly like the sim driver prices its PCIe swap."""
+        if not (self.preempt and pending and active
+                and len(active) >= self.max_concurrency):
+            return
+        sel = self._select_preemption(pending, active, self.ex.now() - t0,
+                                      arrived_only=False)
+        if sel is None:
+            return
+        urgent, v = sel
+        active.remove(v)
+        v.preempt_count += 1
+        self.preemptions += 1
+        if self.swap_on_preempt and v.op.batch_ctx is not None:
+            nbytes = sum(pool.swap_out()
+                         for pool in v.op.batch_ctx.pools.values())
+            if nbytes:
+                v.swapped_bytes = nbytes
+                v.swap_count += 1
+                self.swaps += 1
+                self.swap_bytes += nbytes
+        preempted.append(v)
+        # the urgent request takes the freed slot immediately
+        pending.remove(urgent)
+        self._start_real(urgent, active, done)
+
+    def _resume_real(self, preempted, active):
+        """Resume preempted plans (FIFO) whenever a slot frees; swapped-out
+        pools are restored to device memory before the plan's next op runs."""
+        while preempted and len(active) < self.max_concurrency:
+            v = preempted.pop(0)
+            if v.swapped_bytes:
+                self.swap_bytes += sum(
+                    pool.swap_in() for pool in v.op.batch_ctx.pools.values())
+                v.swapped_bytes = 0
+            active.append(v)
+
     def _real_decode_batch(self, active: List[_Active]) -> Optional[List[_Active]]:
         """Assemble one real-mode batched decode iteration, or None.
 
@@ -582,9 +675,14 @@ class Scheduler:
         if len(cands) < 2:
             return None
         cands.sort(key=lambda a: (a.batch_stamp, a.request.request_id))
-        groups: Dict[int, List[_Active]] = {}
+        # group by backend AND pool residency: a batched kernel pass walks
+        # either the device or the host pool path, so plans whose engines
+        # disagree on device_tail_pool must not land in one batch
+        groups: Dict[tuple, List[_Active]] = {}
         for a in cands:
-            groups.setdefault(id(a.op.batch_ctx.backend), []).append(a)
+            ctx = a.op.batch_ctx
+            key = (id(ctx.backend), bool(ctx.pools[0].is_device))
+            groups.setdefault(key, []).append(a)
         # the group holding the longest-waiting candidate wins; group size
         # breaks ties so throughput is preserved when nobody is starved
         members = min(groups.values(),
@@ -621,32 +719,25 @@ class Scheduler:
             a.plan.clock.t = ex.now()
             try:
                 a.op = a.plan.gen.send(send)
+                self._observe_ttft(a)
             except StopIteration as stop:
                 active.remove(a)
-                done.append(CompletedRequest(a.request, a.plan.trace,
-                                             stop.value, a.admitted,
-                                             ex.now()))
+                self._finish_real(a, done, stop.value)
 
     def _run_real(self, requests: List[Request]) -> List[CompletedRequest]:
         ex = self.ex
         pending = sorted(requests, key=lambda r: (r.arrival, r.request_id))
         active: List[_Active] = []
+        preempted: List[_Active] = []
         done: List[CompletedRequest] = []
-        while pending or active:
+        t0 = ex.now()
+        while pending or active or preempted:
+            self._resume_real(preempted, active)
             while pending and len(active) < self.max_concurrency:
                 req = self.policy.select(pending, self.engines)
                 pending.remove(req)
-                eng = self.engines[req.tenant]
-                plan = eng.plan(req.suffix, req.request_id,
-                                decode_tokens=req.decode_tokens)
-                plan.clock.t = ex.now()
-                a = _Active(req, plan, plan.clock.t)
-                try:
-                    a.op = plan.gen.send(None)
-                    active.append(a)
-                except StopIteration as stop:
-                    done.append(CompletedRequest(req, plan.trace, stop.value,
-                                                 a.admitted, ex.now()))
+                self._start_real(req, active, done)
+            self._preempt_real(pending, active, preempted, t0, done)
             progressed = False
             # iteration-level batching: coalesce runnable decode steps into
             # one kernel pass; prefill/IO ops keep the cooperative
@@ -678,11 +769,10 @@ class Scheduler:
                 progressed = True
                 try:
                     a.op = a.plan.gen.send(send)
+                    self._observe_ttft(a)
                 except StopIteration as stop:
                     active.remove(a)
-                    done.append(CompletedRequest(a.request, a.plan.trace,
-                                                 stop.value, a.admitted,
-                                                 ex.now()))
+                    self._finish_real(a, done, stop.value)
             if not progressed and active:
                 # every plan is blocked on a pending future: sleep on the I/O
                 futs = [a.op.handle.future for a in active

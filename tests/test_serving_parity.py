@@ -279,6 +279,78 @@ def test_real_batched_decode_matches_unbatched(system, real_stack):
                                    err_msg=f"{system} req {cb.request.request_id}")
 
 
+def test_real_preempt_resume_round_trip_bit_identical(real_stack,
+                                                      real_serial_refs,
+                                                      monkeypatch):
+    """Real-driver SLO preemption: a preempt -> TailPool swap-out -> resume
+    -> swap-in round trip reproduces the uninterrupted run's logits and
+    greedy token stream bit-for-bit.
+
+    FCFS admission puts the long decode into the single slot; the urgent
+    short-SLO request then projects a TTFT miss (the seeded prefill
+    estimate guarantees the projection), preempts the decode plan at its
+    step boundary, snapshots its device-resident pools to host, runs, and
+    hands the slot back."""
+    from repro.core.backends import DeviceTailPool
+
+    cfg = real_stack[0]
+    eng = _real_engine("contiguous_kv", real_stack)
+    sched = Scheduler(eng, policy="fcfs", max_concurrency=1, preempt=True,
+                      swap_on_preempt=True, prefill_estimate=10.0)
+    reqs = [Request(request_id=0, suffix=_real_suffix(0, cfg),
+                    decode_tokens=REAL_DECODE),
+            Request(request_id=1, suffix=_real_suffix(1, cfg),
+                    ttft_target=1e-6)]
+    # record both swap legs so the scheduler's byte accounting is pinned
+    # against what the pools actually moved (out leg == in leg > 0)
+    legs = {"out": 0, "in": 0}
+    real_out, real_in = DeviceTailPool.swap_out, DeviceTailPool.swap_in
+
+    def meter(leg, orig):
+        def wrapped(self):
+            n = orig(self)
+            legs[leg] += n
+            return n
+        return wrapped
+
+    monkeypatch.setattr(DeviceTailPool, "swap_out", meter("out", real_out))
+    monkeypatch.setattr(DeviceTailPool, "swap_in", meter("in", real_in))
+    done = {c.request.request_id: c for c in sched.run(reqs)}
+
+    assert sched.preemptions == 1 and sched.swaps == 1
+    assert legs["out"] == legs["in"] > 0
+    assert sched.swap_bytes == legs["out"] + legs["in"]
+    victim = done[0]
+    assert victim.preemptions == 1 and victim.swaps == 1
+    assert done[1].preemptions == 0
+
+    # the uninterrupted reference comes from the shared drive_serial fixture
+    ref_logits, ref_tr = real_serial_refs["contiguous_kv"][0]
+    np.testing.assert_array_equal(np.asarray(victim.result),
+                                  np.asarray(ref_logits),
+                                  err_msg="resumed logits diverge")
+    assert victim.trace.decode_tokens_out == ref_tr.decode_tokens_out
+    assert len(victim.trace.decode_times) == REAL_DECODE
+    for got, ref in zip(victim.trace.decode_selected,
+                        ref_tr.decode_selected):
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_real_preempt_disabled_never_preempts(real_stack):
+    """Same scenario with preempt=False: the urgent request just waits."""
+    cfg = real_stack[0]
+    eng = _real_engine("contiguous_kv", real_stack)
+    sched = Scheduler(eng, policy="fcfs", max_concurrency=1,
+                      swap_on_preempt=True, prefill_estimate=10.0)
+    reqs = [Request(request_id=0, suffix=_real_suffix(0, cfg),
+                    decode_tokens=REAL_DECODE),
+            Request(request_id=1, suffix=_real_suffix(1, cfg),
+                    ttft_target=1e-6)]
+    done = sched.run(reqs)
+    assert sched.preemptions == 0 and sched.swaps == 0
+    assert all(c.preemptions == 0 for c in done)
+
+
 @pytest.mark.parametrize("system", SYSTEMS)
 def test_concurrency_one_with_decode_prices_like_serial(system, serial_traces):
     """decode_tokens > 0 at concurrency 1: the batched path degenerates to
