@@ -12,7 +12,9 @@
 #   verify-serving-tests — parity + property + golden tests (the serving
 #                       benchmark with its decode/mixed gates runs once in
 #                       CI, inside bench-trend; local `verify-serving`
-#                       still runs both);
+#                       still runs both), plus verify-hybrid (the
+#                       compute-or-load hybrid re-prefill suite) in the
+#                       same serving-regression job;
 #   bench-trend       — the serving throughput benchmark (all of its
 #                       acceptance asserts) + its JSON vs the committed
 #                       baseline (benchmarks/check_trend.py regression
@@ -29,6 +31,12 @@ SERVING_TESTS := tests/test_serving.py tests/test_serving_parity.py \
 	tests/test_channelsim_props.py tests/test_mixed_batch_props.py \
 	tests/test_golden_trace.py tests/test_decode.py
 
+# compute-or-load hybrid re-prefill: planner properties, force-load/no-planner
+# bit-identity for all four engines, real-mode recomputed-KV-vs-store
+# exactness and the vmapped prefill-chunk batch former (runs in the
+# serving-regression CI job via verify-hybrid; ignored by verify-core-tests)
+HYBRID_TESTS := tests/test_hybrid.py
+
 # the verify-kernels suite (its own CI job; ignored by verify-core-tests so
 # nothing runs twice): TailPool/DeviceTailPool equivalence tests, the
 # device-pool no-reupload/swap tests, and the decode_attention ragged-batch
@@ -37,7 +45,8 @@ KERNEL_TESTS := tests/test_kernels.py tests/test_tail_pool.py \
 	tests/test_device_pool.py
 
 .PHONY: verify verify-core verify-core-tests verify-kernels verify-serving \
-	verify-serving-tests test bench-throughput bench-baseline bench-trend
+	verify-serving-tests verify-hybrid test bench-throughput \
+	bench-baseline bench-trend
 
 verify: test bench-throughput
 
@@ -53,7 +62,8 @@ verify-core-tests:
 		--deselect tests/test_sharding_small.py \
 		--deselect tests/test_checkpoint.py::TestCheckpoint::test_elastic_restore_onto_different_mesh \
 		$(addprefix --ignore=,$(SERVING_TESTS)) \
-		$(addprefix --ignore=,$(KERNEL_TESTS))
+		$(addprefix --ignore=,$(KERNEL_TESTS)) \
+		$(addprefix --ignore=,$(HYBRID_TESTS))
 
 # fast inner loop for kernel / TailPool / DeviceTailPool work
 verify-kernels:
@@ -62,7 +72,10 @@ verify-kernels:
 verify-serving-tests:
 	$(PY) -m pytest -q --durations=15 $(SERVING_TESTS)
 
-verify-serving: verify-serving-tests
+verify-hybrid:
+	$(PY) -m pytest -q --durations=15 $(HYBRID_TESTS)
+
+verify-serving: verify-serving-tests verify-hybrid
 	$(PY) benchmarks/bench_throughput.py --quick
 
 bench-throughput:

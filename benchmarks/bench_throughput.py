@@ -18,6 +18,14 @@ unchunked batching at c4 (gated: chunking must cut ContiguousKV's P95
 TTFT), then drives an SLO scenario with preemption + swap enabled and
 reports preemption/swap counts (gated: at least one preemption fires).
 
+A hybrid re-prefill section sweeps an IO-constrained device (paper-grade
+accelerator with the SSD derated 1x/4x/16x) on a KV-heavy GQA config and
+compares ``--hybrid-reprefill auto`` against ``force-load`` (bit-identical
+to the pre-planner path): P95/mean TTFT per scale plus the recompute-avoided
+SSD bytes.  Gated: at the 16x point auto must beat force-load on P95 TTFT
+(``hybrid_speedup >= 1.0`` is additionally pinned by the bench-trend job);
+at 1x, where IO is cheap, auto must not fire at all (exact parity).
+
 A real-mode section serves a tiny real model (wall clock, interpret-mode
 Pallas kernels) at concurrency 4 with and without the real driver's
 batched paged decode attention and reports decode_tok_rate b=1 vs b<=4
@@ -252,7 +260,101 @@ def run(quick: bool = False):
             > s_np.get("slo_attainment", 0.0)), (
         "preemption did not improve SLO attainment under pressure")
 
+    rows += _hybrid_sweep_rows()
     rows += _real_decode_rows(quick)
+    return rows
+
+
+def _hybrid_sweep_rows():
+    """IO-constrained sweep: hybrid re-prefill vs load-only (sim).
+
+    The recompute-vs-load crossover is a property of the model's KV
+    bytes/token against its forward FLOPs/token, so the sweep runs a
+    KV-heavy GQA config (qwen3-1.7b: 8 KV heads at 1.7B params — twice
+    the KV bytes per forward FLOP of qwen2.5-7b) on the paper device with
+    the SSD path derated 1x/4x/16x (bandwidth and IOPS divided, latency
+    multiplied).  At 1x the planner must stay silent — IO is cheaper than
+    any truncated forward, and ``auto`` must price that correctly rather
+    than burn compute for parity.  At 16x the SSD queue under concurrency 4
+    makes head-of-prefix recompute win, and ``auto`` must realize the
+    modeled gain end-to-end (queueing, batch forming and preemption
+    included).  The sim is deterministic, so the reported speedups are
+    exact run-to-run — the same numbers the bench-trend job pins."""
+    import dataclasses as _dc
+
+    from repro.configs import get_config
+    from repro.core.backends import SimCompute
+    from repro.core.engine import ContiguousKVEngine
+    from repro.core.hybrid import HybridPlanner
+    from repro.core.session import SyntheticWorkload, build_sim_session
+    from repro.storage.timing import SimExecutor
+
+    cfg = get_config("qwen3-1.7b")
+    prefix_len, suffix_len, n_req, conc, rate = 2048, 256, 32, 4, 16.0
+
+    def serve(mode: str, scale: int):
+        model = _dc.replace(PAPER_DEVICE,
+                            ssd_bandwidth=PAPER_DEVICE.ssd_bandwidth / scale,
+                            ssd_iops=PAPER_DEVICE.ssd_iops / scale,
+                            ssd_latency=PAPER_DEVICE.ssd_latency * scale)
+        sess = build_sim_session(cfg, prefix_len, chunk_tokens=16)
+        wl = SyntheticWorkload(prefix_len, cfg.n_layers, seed=0)
+        eng = ContiguousKVEngine(sess, SimCompute(cfg, wl),
+                                 SimExecutor(model),
+                                 device_cap=24, host_cap=48,
+                                 hybrid=HybridPlanner(mode))
+        rng = np.random.default_rng(7)
+        t, reqs = 0.0, []
+        for i in range(n_req):
+            t += rng.exponential(1.0 / rate)
+            reqs.append(Request(request_id=i,
+                                suffix=np.arange(suffix_len) % 100,
+                                arrival=t))
+        done = Scheduler({0: eng}, max_concurrency=conc,
+                         max_batch_tokens=2048).run(reqs)
+        ttfts = sorted(c.trace.ttft for c in done)
+        return {
+            "p95": ttfts[int(0.95 * (len(ttfts) - 1))],
+            "mean": sum(ttfts) / len(ttfts),
+            "recompute_units": sum(c.trace.recompute_units for c in done),
+            "ssd_bytes_avoided": sum(c.trace.ssd_bytes_avoided
+                                     for c in done),
+        }
+
+    rows = []
+    speedups = {}
+    for scale in (1, 4, 16):
+        res = {mode: serve(mode, scale)
+               for mode in ("force-load", "auto")}
+        speedups[scale] = res["force-load"]["p95"] / res["auto"]["p95"]
+        tag = f"serving/hybrid/x{scale}"
+        for mode, label in (("force-load", "force_load"), ("auto", "auto")):
+            rows += [
+                (f"{tag}/{label}/p95_ttft_ms", res[mode]["p95"] * 1e3, "ms"),
+                (f"{tag}/{label}/mean_ttft_ms", res[mode]["mean"] * 1e3,
+                 "ms"),
+            ]
+        rows += [
+            (f"{tag}/hybrid_speedup", speedups[scale], "x"),
+            (f"{tag}/recompute_units", res["auto"]["recompute_units"],
+             "units"),
+            (f"{tag}/ssd_bytes_avoided_mb",
+             res["auto"]["ssd_bytes_avoided"] / 1e6, "MB"),
+        ]
+        if scale == 1:
+            # cheap IO: a planner that fires here is mispricing the legs
+            assert res["auto"]["recompute_units"] == 0, (
+                f"hybrid auto recomputed {res['auto']['recompute_units']} "
+                f"units at 1x SSD — the IO leg is being overpriced")
+            assert speedups[scale] == 1.0, (
+                f"hybrid auto diverged from force-load at 1x SSD without "
+                f"firing: speedup {speedups[scale]:.4f}")
+    assert speedups[16] >= 1.0, (
+        f"hybrid auto lost to force-load at 16x-derated SSD: P95 speedup "
+        f"{speedups[16]:.4f}")
+    assert speedups[16] > 1.02, (
+        f"hybrid auto did not beat force-load at 16x-derated SSD: P95 "
+        f"speedup {speedups[16]:.4f}")
     return rows
 
 
@@ -506,7 +608,9 @@ def main():
         print(f"{name},{val:.6g},{derived}")
     print("# gate ok: contiguous_kv p95 < impress at every offered load; "
           "batched decode beats unbatched at c4; chunked prefill mixing "
-          "cuts p95 TTFT at c4; SLO pressure preempts; real-mode batched "
+          "cuts p95 TTFT at c4; SLO pressure preempts; hybrid auto beats "
+          "force-load at 16x-derated SSD and stays silent at 1x; "
+          "real-mode batched "
           "decode raises decode_tok_rate; device-resident pools beat the "
           "host-resident path on the b=1 step rate and move no pool bytes "
           "over H2D")

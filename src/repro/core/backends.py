@@ -70,6 +70,19 @@ def _part_b(lp, h, q, k_suf, v_suf, k_sel, v_sel, sel_valid, cfg: ModelConfig,
     return h, mass
 
 
+@partial(jax.jit, static_argnames=("cfg", "chunk_tokens"))
+def _part_b_batch_kernel(lp, h, q, k_suf, v_suf, k_sel, v_sel, sel_valid,
+                         cfg: ModelConfig, chunk_tokens: int):
+    """vmapped :func:`_part_b` over a leading batch axis: b plans' same-layer
+    final prefill chunks run as one accelerator pass (the layer weights `lp`
+    stream once for the whole batch)."""
+
+    def one(hh, qq, ks, vs, k1, v1, vd):
+        return _part_b(lp, hh, qq, ks, vs, k1, v1, vd, cfg, chunk_tokens)
+
+    return jax.vmap(one)(h, q, k_suf, v_suf, k_sel, v_sel, sel_valid)
+
+
 @jax.jit
 def _final_logits_kernel(params, h, norm_eps: float):
     h = rms_norm(h[:, -1:], params["final_norm"], norm_eps)
@@ -392,6 +405,50 @@ class RealCompute:
             self.cfg, chunk_tokens,
         )
         return h, np.asarray(mass)
+
+    def part_b_batch(self, ctxs):
+        """b plans' same-layer final prefill chunks as one vmapped pass.
+
+        `ctxs` are :class:`repro.core.stepplan.PrefillChunkCtx` handles with
+        identical shapes (the batch former groups on ``shape_key()``).
+        Returns one (h, mass) pair per ctx, in order — exactly what each
+        plan's generator expects from its single-request ``fn``.
+        """
+        c0 = ctxs[0]
+        lp = _slice_layer(self.params, c0.layer)
+        h = jnp.stack([c.h for c in ctxs])
+        q = jnp.stack([c.q for c in ctxs])
+        k_suf = jnp.stack([c.k_suf for c in ctxs])
+        v_suf = jnp.stack([c.v_suf for c in ctxs])
+        k_sel = jnp.asarray(np.stack([np.asarray(c.k_sel) for c in ctxs]))
+        v_sel = jnp.asarray(np.stack([np.asarray(c.v_sel) for c in ctxs]))
+        valid = jnp.asarray(np.stack([np.asarray(c.valid) for c in ctxs]))
+        hs, masses = _part_b_batch_kernel(lp, h, q, k_suf, v_suf, k_sel,
+                                          v_sel, valid, self.cfg,
+                                          c0.chunk_tokens)
+        mass_host = np.asarray(masses)
+        return [(hs[i], mass_host[i]) for i in range(len(ctxs))]
+
+    def recompute_prefix_kv(self, prefix_tokens: np.ndarray, end: int,
+                            block_q: int):
+        """Recompute KV for the prefix head ``[0, end)`` from raw tokens.
+
+        Runs the same truncated causal forward the ingest path used
+        (``transformer.forward`` with ``return_kv=True``), so the fp16 KV is
+        *bit-identical* to what ``ChunkStore`` holds: causal attention over
+        a head never sees the tail, and the NEG_INF mask zeroes excluded
+        positions exactly.  The token upload goes through ``jnp.asarray`` so
+        the H2D meter accounts it.  Returns (k, v), each (L, end, n_kv, d)
+        float16.
+        """
+        from repro.models import transformer as T
+
+        toks = jnp.asarray(np.asarray(prefix_tokens[:end]))[None]
+        _, kvs = T.forward(self.params, {"tokens": toks}, self.cfg,
+                           block_q=block_q, return_kv=True)
+        k = np.asarray(kvs[0][:, 0], np.float16)
+        v = np.asarray(kvs[1][:, 0], np.float16)
+        return k, v
 
     def logits(self, h) -> np.ndarray:
         return np.asarray(_final_logits_kernel(self.params, h, self.cfg.norm_eps))

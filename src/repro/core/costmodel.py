@@ -79,6 +79,30 @@ def prefill_chunk_cost(cfg: ModelConfig, chunk_len: int,
     return LayerCost(flops=float(lc.flops - part_a), hbm_bytes=lc.hbm_bytes)
 
 
+def chunk_recompute_cost(cfg: ModelConfig, span_tokens: int,
+                         frontier_tokens: int = 0) -> LayerCost:
+    """Recompute `span_tokens` of prefix KV by extending a causal recompute
+    frontier that currently ends at `frontier_tokens`.
+
+    The span runs through *every* layer of the model (one truncated causal
+    forward), each position attending to the frontier plus its own causal
+    prefix within the span, so the attention term uses the average attended
+    length ``frontier + (span + 1) / 2``.  The cost is exactly additive in
+    the frontier: ``cost(a, 0) + cost(b - a, a) == cost(b, 0)`` FLOP-wise,
+    which is what lets the hybrid planner walk cut points incrementally.
+
+    HBM traffic per layer = weights + the KV read of the attended set; the
+    embedding lookup is included, the LM head is not (recompute produces KV,
+    not logits).  The batch-shared slice is ``n_layers * layer_weight_bytes``
+    (the whole model streams once per iteration), matching ``weight_key =
+    "model"`` in the step plan."""
+    avg_attended = frontier_tokens + (span_tokens + 1) / 2.0
+    lc = suffix_layer_cost(cfg, span_tokens, avg_attended)
+    flops = cfg.n_layers * lc.flops + 2.0 * span_tokens * cfg.d_model
+    hbm = cfg.n_layers * lc.hbm_bytes
+    return LayerCost(flops=float(flops), hbm_bytes=float(hbm))
+
+
 def decode_layer_cost(cfg: ModelConfig, attended_tokens: int) -> LayerCost:
     """One decode position through one layer: the suffix cost at s=1."""
     return suffix_layer_cost(cfg, 1, attended_tokens)

@@ -46,9 +46,11 @@ from repro.core.importance import (
 from repro.core.periods import PeriodSchedule
 from repro.core.sparse_attention import bucket_size
 from repro.core.backends import DeviceTailPool, TailPool
+from repro.core.hybrid import HybridPlanner, TOKEN_BYTES
 from repro.core.stepplan import (
     ComputeOp,
     DecodeBatchCtx,
+    PrefillChunkCtx,
     RequestClock,
     StepPlan,
     WaitOp,
@@ -76,6 +78,9 @@ class PrefixSession:
     store: object  # ChunkStore or PlanStore
     probe: Optional[np.ndarray] = None  # (L, n, n_kv, d) fp16 prefix keys
     tenant: int = 0  # namespace for shared-cache keys (0 = single-tenant)
+    # prefix token ids (real mode): the raw material the hybrid re-prefill
+    # planner recomputes KV from; None disables recompute in real mode
+    tokens: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -101,6 +106,11 @@ class ReprefillTrace:
     decode_times: List[float] = dataclasses.field(default_factory=list)
     decode_selected: List[np.ndarray] = dataclasses.field(default_factory=list)
     decode_tokens_out: List[int] = dataclasses.field(default_factory=list)  # real mode: greedy token ids
+    # hybrid re-prefill (compute-or-load): per-request planner outcome
+    recompute_units: int = 0  # units satisfied by recompute instead of load
+    recompute_tokens: int = 0  # causal frontier extent of the recompute leg
+    ssd_bytes_avoided: int = 0  # SSD traffic (all layers) recompute saved
+    hybrid_decision: object = None  # core.hybrid.HybridDecision (or None)
 
     @property
     def read_amplification(self) -> float:
@@ -160,6 +170,7 @@ class _EngineBase:
         budget: float = 0.25,
         prefill_chunk_tokens: Optional[int] = None,
         device_tail_pool: bool = True,
+        hybrid: Optional[HybridPlanner] = None,
         suffix_flops_attended=None,
     ):
         self.session = session
@@ -167,6 +178,9 @@ class _EngineBase:
         self.ex = executor
         self.cache = cache
         self.budget = budget
+        # compute-or-load hybrid re-prefill planner (core.hybrid); None or
+        # mode "off" keeps today's load-only path bit-identically
+        self.hybrid = hybrid
         # chunk-granular prefill: split each layer's suffix compute into
         # resumable chunks of this many tokens so the serving scheduler can
         # mix them with other plans' decode tokens. None (or >= suffix len)
@@ -276,7 +290,11 @@ class _EngineBase:
                 handles[self._key(layer, u)] = h
         if missing:
             nbytes, nreq = store.run_plan(layer, missing)
-            h = self._io(clock, self._mk_fetch(layer, missing, from_host=False),
+            fetch = self._mk_fetch(layer, missing, from_host=False)
+            if fetch is not None and self.hybrid is not None:
+                # feed the planner's EWMA of measured IO service time
+                fetch = self.hybrid.timed_fetch(fetch, nbytes, nreq)
+            h = self._io(clock, fetch,
                          nbytes=nbytes, n_requests=nreq, channel="ssd")
             if self.sim:  # chain the PCIe leg after the SSD leg
                 h = self._io(clock, None, nbytes=nbytes, n_requests=1,
@@ -343,6 +361,93 @@ class _EngineBase:
             self._data[self._key(layer, unit)] = rec
         return rec
 
+    # -- hybrid re-prefill (compute-or-load) ----------------------------------
+    def _hybrid_reprefill(self, request_id: int, selected, trace, handles,
+                          clock: RequestClock, suffix_len: int = 0,
+                          attended: int = 0, extra_overlap_flops: float = 0.0):
+        """Generator: recompute-vs-load split over the first selection.
+
+        Consulted once per request, at the first point the important-unit set
+        is known (period 0 / layer 0).  The planner prices a cut point over
+        the cache-missing units; the head ``[0, end)`` of the prefix is then
+        recomputed by ONE truncated causal forward covering *every* layer
+        (bit-identical to the ingested KV), its units installed as DEVICE
+        residents with ready handles so every later ``_submit_units`` — any
+        layer, any period — sees hits instead of SSD traffic.  The tail
+        stays on today's load path.  With no planner, mode "off", or mode
+        "force-load" this yields nothing, so the plan is unchanged op-for-op.
+        """
+        hp = self.hybrid
+        if hp is None or hp.mode == "off":
+            return
+        if not self.sim and self.session.tokens is None:
+            return  # no prefix tokens retained: nothing to recompute from
+        # `contains`, not `lookup`: this is a planning probe, and a declined
+        # decision must leave hit stats / recency untouched (force-load has
+        # to stay bit-identical to running with no planner at all)
+        missing = sorted(
+            int(u) for u in selected
+            if self._key(0, int(u)) not in handles
+            and self.cache.contains(self._key(0, int(u))) is None)
+        if not missing:
+            return
+        d = hp.decide(cfg=self.cfg, store=self.session.store,
+                      missing_units=missing,
+                      prefix_len=self.session.prefix_len, clock_t=clock.t,
+                      executor=self.ex if self.sim else None,
+                      suffix_len=suffix_len, attended_tokens=attended,
+                      extra_overlap_flops=extra_overlap_flops)
+        trace.hybrid_decision = d
+        if not d.recompute_units:
+            return
+        t0 = clock.t
+        end = int(d.recompute_tokens)
+        layout = self.session.store.layout
+        cfg = self.cfg
+        # the prefix tokens are host-resident (the prompt): PCIe upload only,
+        # never the SSD queue the recompute is trying to dodge
+        tok_bytes = TOKEN_BYTES * end
+        h_tok = self._io(clock, None if self.sim else (lambda: None),
+                         nbytes=tok_bytes, n_requests=1, channel="pcie")
+        yield WaitOp(h_tok, tag="recompute_io")
+        cost = CM.chunk_recompute_cost(cfg, end, 0)
+        wb = float(cfg.n_layers * CM.layer_weight_bytes(cfg))
+        fn = None
+        if not self.sim:
+            units = [int(u) for u in d.recompute_units]
+
+            def fn(units=units, end=end):
+                k_all, v_all = self.backend.recompute_prefix_kv(
+                    self.session.tokens, end,
+                    block_q=min(512, max(16, self.session.prefix_len)))
+                ut = layout.unit_tokens
+                g = layout.geom
+                for u in units:
+                    lo, hi = u * ut, min((u + 1) * ut, end)
+                    for l in range(cfg.n_layers):
+                        rec = np.zeros((ut, 2, g.n_kv_heads, g.d_head),
+                                       np.float16)
+                        rec[: hi - lo, 0] = k_all[l, lo:hi]
+                        rec[: hi - lo, 1] = v_all[l, lo:hi]
+                        self._data[self._key(l, u)] = rec
+                return None
+
+        yield ComputeOp(self._bound(request_id, fn) if fn is not None else None,
+                        flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                        tag="recompute", phase="prefill", tokens=end,
+                        weight_bytes=wb, weight_key="model")
+        # recomputed KV occupies the same pool pages loaded KV would: ready
+        # handles + DEVICE-tier cache entries for every layer's head units
+        for u in d.recompute_units:
+            for l in range(cfg.n_layers):
+                key = self._key(l, int(u))
+                handles[key] = IOHandle(ready_at=clock.t)
+                self.cache.insert(key, DEVICE)
+        trace.recompute_units += len(d.recompute_units)
+        trace.recompute_tokens += end
+        trace.ssd_bytes_avoided += d.ssd_bytes_avoided
+        trace.add_stage("recompute", clock.t - t0)
+
     # -- probe ----------------------------------------------------------------
     def _submit_probe(self, layer: int, trace: ReprefillTrace,
                       clock: RequestClock, ratio: float = 1.0):
@@ -380,7 +485,7 @@ class _EngineBase:
         return lc.flops - a, lc.hbm_bytes
 
     def _part_b_ops(self, fn, suffix_len: int, attended: int, layer: int,
-                    tag: str = "compute"):
+                    tag: str = "compute", ctx: Optional[PrefillChunkCtx] = None):
         """Yield one layer's part-B suffix compute, chunk-granular on demand.
 
         With ``prefill_chunk_tokens`` unset or >= the suffix length this is
@@ -391,7 +496,10 @@ class _EngineBase:
         token-budgeted batch former can coalesce it with other plans' decode
         tokens (the weight stream is then paid once per iteration).  Only
         the final chunk runs ``fn`` — earlier chunks are pure occupancy, so
-        real-mode results are unaffected.  Returns the final op's value."""
+        real-mode results are unaffected.  The final chunk also carries
+        `ctx` (a real-mode :class:`PrefillChunkCtx`), letting the wall-clock
+        batch former coalesce it with other plans' same-layer final chunks
+        into one ``part_b_batch`` pass.  Returns the final op's value."""
         c = self.prefill_chunk_tokens
         if not c or c >= suffix_len:
             fl, hb = self._cost_part_b(suffix_len, attended)
@@ -403,13 +511,26 @@ class _EngineBase:
         while done < suffix_len:
             n_tok = min(c, suffix_len - done)
             done += n_tok
+            final = done >= suffix_len
             cost = CM.prefill_chunk_cost(self.cfg, n_tok, attended)
-            out = yield ComputeOp(fn if done >= suffix_len else None,
+            out = yield ComputeOp(fn if final else None,
                                   flops=cost.flops, hbm_bytes=cost.hbm_bytes,
                                   tag=tag, phase="prefill", tokens=n_tok,
                                   weight_bytes=wb,
-                                  weight_key=f"layer:{layer}")
+                                  weight_key=f"layer:{layer}",
+                                  batch_ctx=ctx if final else None)
         return out
+
+    def _chunk_ctx(self, layer, h, q, k_suf, v_suf, k_sel, v_sel, valid,
+                   chunk_tokens) -> Optional[PrefillChunkCtx]:
+        """Batching surface for this layer's final prefill chunk (real mode
+        with chunking active; None otherwise)."""
+        if self.sim or not self.prefill_chunk_tokens:
+            return None
+        return PrefillChunkCtx(backend=self.backend, layer=int(layer), h=h,
+                               q=q, k_suf=k_suf, v_suf=v_suf, k_sel=k_sel,
+                               v_sel=v_sel, valid=valid,
+                               chunk_tokens=int(chunk_tokens))
 
     # -- gather ----------------------------------------------------------------
     def _gather_chunks(self, layer: int, units: np.ndarray, chunk_tokens: int):
@@ -578,11 +699,12 @@ class ContiguousKVEngine(_EngineBase):
                  period: int = 8, subperiod: int = 4, prefetch: bool = True,
                  inter_period: bool = True, device_cap: int = 0, host_cap: int = 0,
                  prefill_chunk_tokens: Optional[int] = None,
-                 device_tail_pool: bool = True):
+                 device_tail_pool: bool = True,
+                 hybrid: Optional[HybridPlanner] = None):
         cache = cache if cache is not None else AttentionGuidedCache(device_cap, host_cap)
         super().__init__(session, backend, executor, cache, budget=budget,
                          prefill_chunk_tokens=prefill_chunk_tokens,
-                         device_tail_pool=device_tail_pool)
+                         device_tail_pool=device_tail_pool, hybrid=hybrid)
         self.schedule = PeriodSchedule(self.cfg.n_layers, period, subperiod)
         self.prefetch = prefetch
         self.inter_period = inter_period and prefetch
@@ -631,6 +753,13 @@ class ContiguousKVEngine(_EngineBase):
             for l in period.layers:
                 trace.selected_per_layer[l] = selected
 
+            if period.index == 0:
+                yield from self._hybrid_reprefill(
+                    request_id, selected, trace, handles, clock,
+                    suffix_len=s,
+                    attended=len(selected) * meta.chunk_tokens + s,
+                    extra_overlap_flops=(len(self.schedule)
+                                         * self._cost_identify(s)))
             if self.prefetch:
                 for l in period.layers:
                     self._submit_units(l, list(selected), trace, handles, clock)
@@ -665,7 +794,9 @@ class ContiguousKVEngine(_EngineBase):
                                 lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
                                        k1=k_sel, v1=v_sel, vd=valid: be.part_b(
                                     ll, hh, b, c1, c2, k1, v1, vd, meta.chunk_tokens)),
-                    s, n_attended, l)
+                    s, n_attended, l,
+                    ctx=self._chunk_ctx(l, h, q, k_suf, v_suf, k_sel, v_sel,
+                                        valid, meta.chunk_tokens))
                 # attention-guided cache updates (Eq. 1/2)
                 if isinstance(self.cache, AttentionGuidedCache) and mass is not None:
                     for i, u in enumerate(selected):
@@ -745,6 +876,13 @@ class _BlockBaselineEngine(_EngineBase):
                 needed = None  # whole blocks are needed: amplification 1.0
                 n_attended = self.session.prefix_len + s
 
+            if l == 0:
+                yield from self._hybrid_reprefill(
+                    request_id, blocks, trace, handles, clock,
+                    suffix_len=s, attended=n_attended,
+                    extra_overlap_flops=(cfg.n_layers * self._cost_identify(s)
+                                         * self.probe_ratio
+                                         if self.select_tokens else 0.0))
             self._submit_units(l, blocks, trace, handles, clock,
                                needed_bytes_per_unit=needed)
             yield from self._wait_keys(l, blocks, handles, trace, "kv_io", clock)
@@ -757,7 +895,9 @@ class _BlockBaselineEngine(_EngineBase):
                             lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
                                    k1=k_sel, v1=v_sel, vd=valid: be.part_b(
                                 ll, hh, b, c1, c2, k1, v1, vd, 1)),
-                s, n_attended, l)
+                s, n_attended, l,
+                ctx=self._chunk_ctx(l, h, q, k_suf, v_suf, k_sel, v_sel,
+                                    valid, 1))
             if isinstance(self.cache, ImpressScoreCache):
                 # static importance: fraction of selected tokens in each block
                 for blk in blocks:
@@ -803,12 +943,13 @@ class ASLRUEngine(_BlockBaselineEngine):
 
     def __init__(self, session, backend, executor, *, device_cap=0, host_cap=0,
                  prefill_chunk_tokens: Optional[int] = None,
-                 device_tail_pool: bool = True):
+                 device_tail_pool: bool = True,
+                 hybrid: Optional[HybridPlanner] = None):
         # Full-prefix streaming: the budget is 1.0 by construction.
         super().__init__(session, backend, executor,
                          LRUCache(device_cap, host_cap), budget=1.0,
                          prefill_chunk_tokens=prefill_chunk_tokens,
-                         device_tail_pool=device_tail_pool)
+                         device_tail_pool=device_tail_pool, hybrid=hybrid)
 
     def _gather_tokens(self, layer, tokens, blocks):
         """Full-prefix attention: gather whole blocks as chunk units."""
@@ -841,6 +982,9 @@ class ASLRUEngine(_BlockBaselineEngine):
         handles: Dict = {}
         layout = self.session.store.layout
         blocks = list(range(layout.n_units))
+        yield from self._hybrid_reprefill(
+            request_id, blocks, trace, handles, clock,
+            suffix_len=s, attended=self.session.prefix_len + s)
         # AS prefetches all layers' KV up-front (full cache streaming)
         for l in range(cfg.n_layers):
             self._submit_units(l, blocks, trace, handles, clock)
@@ -858,7 +1002,9 @@ class ASLRUEngine(_BlockBaselineEngine):
                             lambda hh=h, ll=l, b=q, c1=k_suf, c2=v_suf,
                                    k1=k_sel, v1=v_sel, vd=valid: be.part_b(
                                 ll, hh, b, c1, c2, k1, v1, vd, layout.unit_tokens)),
-                s, n_attended, l)
+                s, n_attended, l,
+                ctx=self._chunk_ctx(l, h, q, k_suf, v_suf, k_sel, v_sel,
+                                    valid, layout.unit_tokens))
             self._insert_cache(l, blocks)
         logits = yield ComputeOp(lambda hh=h: be.logits(hh),
                                  flops=2.0 * cfg.d_model * cfg.vocab_size, tag="compute")
@@ -880,11 +1026,12 @@ class ASH2OEngine(_BlockBaselineEngine):
     def __init__(self, session, backend, executor, *, budget=0.25,
                  device_cap=0, host_cap=0,
                  prefill_chunk_tokens: Optional[int] = None,
-                 device_tail_pool: bool = True):
+                 device_tail_pool: bool = True,
+                 hybrid: Optional[HybridPlanner] = None):
         super().__init__(session, backend, executor,
                          LFUCache(device_cap, host_cap), budget=budget,
                          prefill_chunk_tokens=prefill_chunk_tokens,
-                         device_tail_pool=device_tail_pool)
+                         device_tail_pool=device_tail_pool, hybrid=hybrid)
 
 
 class IMPRESSEngine(_BlockBaselineEngine):
@@ -896,8 +1043,9 @@ class IMPRESSEngine(_BlockBaselineEngine):
     def __init__(self, session, backend, executor, *, budget=0.25,
                  device_cap=0, host_cap=0,
                  prefill_chunk_tokens: Optional[int] = None,
-                 device_tail_pool: bool = True):
+                 device_tail_pool: bool = True,
+                 hybrid: Optional[HybridPlanner] = None):
         super().__init__(session, backend, executor,
                          ImpressScoreCache(device_cap, host_cap), budget=budget,
                          prefill_chunk_tokens=prefill_chunk_tokens,
-                         device_tail_pool=device_tail_pool)
+                         device_tail_pool=device_tail_pool, hybrid=hybrid)

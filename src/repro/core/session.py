@@ -61,7 +61,10 @@ def build_real_session(
     # when the session is laid out in blocks
     meta = ChunkMeta(n_tokens=n,
                      chunk_tokens=block_tokens if coarse_blocks else chunk_tokens)
-    return PrefixSession(cfg=cfg, prefix_len=n, meta=meta, store=store, probe=k_all)
+    # retain the raw prefix tokens: the hybrid re-prefill planner recomputes
+    # chunk KV from them instead of loading it when IO is the bottleneck
+    return PrefixSession(cfg=cfg, prefix_len=n, meta=meta, store=store,
+                         probe=k_all, tokens=np.asarray(prefix_tokens))
 
 
 def build_sim_session(

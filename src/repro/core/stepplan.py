@@ -65,12 +65,19 @@ class ComputeOp:
     if their keys match or one of them streams the whole model — a batch of
     chunks from *different* layers must not pretend to share weights.
 
-    ``batch_ctx`` (real mode only) is the op's :class:`DecodeBatchCtx`: the
-    request-side handles a wall-clock driver needs to coalesce this decode
-    step with concurrent requests' steps into one batched kernel pass
-    (``backend.decode_step_batch``) instead of running ``fn`` alone.  ``fn``
-    stays the standalone single-request path, so drivers that ignore the
-    metadata (``drive_serial``) execute the plan unchanged.
+    Hybrid re-prefill stamps recompute ops with ``tag="recompute"``,
+    ``phase="prefill"`` and ``weight_key="model"`` (a truncated causal
+    forward streams every layer's weights), so they mix Sarathi-style into
+    decode-led iterations under ``max_batch_tokens`` while load legs stay on
+    the IO channels.
+
+    ``batch_ctx`` (real mode only) is the op's batching surface: a
+    :class:`DecodeBatchCtx` for decode steps (coalesced into one
+    ``backend.decode_step_batch`` pass) or a :class:`PrefillChunkCtx` for
+    the final chunk of a chunked prefill layer (consecutive same-layer chunk
+    ops from different plans coalesce into one ``backend.part_b_batch``
+    call).  ``fn`` stays the standalone single-request path, so drivers that
+    ignore the metadata (``drive_serial``) execute the plan unchanged.
     """
 
     fn: Optional[Callable]
@@ -81,7 +88,7 @@ class ComputeOp:
     weight_bytes: float = 0.0
     tokens: int = 0
     weight_key: str = ""
-    batch_ctx: Optional["DecodeBatchCtx"] = None
+    batch_ctx: Optional[object] = None  # DecodeBatchCtx | PrefillChunkCtx
 
 
 @dataclasses.dataclass
@@ -105,6 +112,38 @@ class DecodeBatchCtx:
     token: int
     pos: int
     pools: dict
+
+
+@dataclasses.dataclass
+class PrefillChunkCtx:
+    """Batchable-op metadata for a real-mode prefill-chunk ComputeOp.
+
+    Carried by the *final* chunk op of a chunked part-B layer (the one whose
+    ``fn`` performs the actual attention; earlier chunks are pure occupancy).
+    Two ops coalesce into one ``backend.part_b_batch`` call only when they
+    share a backend, the same layer and identical array shapes — the batched
+    pass vmaps the single-request part-B, so ragged members cannot mix.
+    """
+
+    backend: object
+    layer: int
+    h: object  # (1, s, d_model) residual stream entering part-B
+    q: object  # (1, s, n_q, d_head) rotated queries
+    k_suf: object  # (1, s, n_kv, d_head) suffix keys
+    v_suf: object  # (1, s, n_kv, d_head) suffix values
+    k_sel: object  # (nb, c, n_kv, d_head) gathered selected-chunk keys
+    v_sel: object  # (nb, c, n_kv, d_head) gathered selected-chunk values
+    valid: object  # (nb,) bucket-validity mask
+    chunk_tokens: int
+
+    def shape_key(self):
+        def sig(x):
+            shp = getattr(x, "shape", None)
+            dt = getattr(x, "dtype", None)
+            return (tuple(shp) if shp is not None else None, str(dt))
+
+        return (self.layer, int(self.chunk_tokens), sig(self.h), sig(self.q),
+                sig(self.k_suf), sig(self.k_sel), sig(self.valid))
 
 
 @dataclasses.dataclass

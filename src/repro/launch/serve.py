@@ -67,9 +67,14 @@ def _real_main(args):
                               chunk_tokens=args.chunk_tokens,
                               coarse_blocks=coarse, in_memory=True)
     ex = RealExecutor()
+    from repro.core.hybrid import HybridPlanner
+
+    hybrid = (None if args.hybrid_reprefill == "off"
+              else HybridPlanner(args.hybrid_reprefill))
     kw = dict(device_cap=64, host_cap=128,
               prefill_chunk_tokens=args.prefill_chunk_tokens,
-              device_tail_pool=not args.host_tail_pool)
+              device_tail_pool=not args.host_tail_pool,
+              hybrid=hybrid)
     if args.system == "contiguous_kv":
         kw.update(budget=args.budget, period=args.period, subperiod=args.subperiod)
     elif args.system != "as_lru":
@@ -110,8 +115,13 @@ def _real_main(args):
               f"{s['decode_tok_rate']:.1f} tok/s")
     if sched.real_batch_log:
         sizes = [len(b) for b in sched.real_batch_log]
-        print(f"batched decode iterations: {len(sizes)} "
+        print(f"batched iterations: {len(sizes)} "
               f"(mean b={np.mean(sizes):.2f}, max b={max(sizes)})")
+    rec_units = sum(c.trace.recompute_units for c in completed)
+    if rec_units:
+        avoided = sum(c.trace.ssd_bytes_avoided for c in completed)
+        print(f"hybrid re-prefill: {rec_units} units recomputed, "
+              f"{avoided/1e6:.2f}MB SSD reads avoided")
     if args.preempt:
         pools = "host" if args.host_tail_pool else "device"
         print(f"preemptions={s['preemptions']} swaps={s['swaps']} "
@@ -127,7 +137,8 @@ def _sim_main(args):
                             prefix_len=args.prefix_len, budget=args.budget,
                             period=args.period, subperiod=args.subperiod,
                             device_cap=args.device_cap, host_cap=args.host_cap,
-                            prefill_chunk_tokens=args.prefill_chunk_tokens)
+                            prefill_chunk_tokens=args.prefill_chunk_tokens,
+                            hybrid_reprefill=args.hybrid_reprefill)
     arrivals = make_arrivals(args.arrival, args.rate, args.requests, seed=0)
     rng = np.random.default_rng(0)
     requests = [
@@ -170,6 +181,11 @@ def _sim_main(args):
     if args.preempt:
         print(f"preemptions={s['preemptions']} swaps={s['swaps']} "
               f"swap_bytes={sched.swap_bytes/1e6:.1f}MB")
+    rec_units = sum(c.trace.recompute_units for c in completed)
+    if rec_units:
+        avoided = sum(c.trace.ssd_bytes_avoided for c in completed)
+        print(f"hybrid re-prefill: {rec_units} units recomputed, "
+              f"{avoided/1e6:.2f}MB SSD reads avoided")
     usage = fleet.cache.tenant_usage()
     for tenant in sorted(usage):
         u = usage[tenant]
@@ -194,6 +210,11 @@ def main():
     p.add_argument("--no-batch-decode", action="store_true",
                    help="disable continuous batching of decode steps "
                         "(sim pricing and real batched kernel passes)")
+    p.add_argument("--hybrid-reprefill", default="off",
+                   choices=("off", "auto", "force-compute", "force-load"),
+                   help="per-chunk recompute-vs-load planning for missing "
+                        "prefix KV (auto prices both legs with the roofline "
+                        "cost model)")
     p.add_argument("--prefill-chunk-tokens", type=int, default=None,
                    help="plan prefill as resumable chunks of this many "
                         "tokens (token-level prefill/decode mixing)")

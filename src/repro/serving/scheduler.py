@@ -63,7 +63,13 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.cache import DEVICE, HOST
-from repro.core.stepplan import ComputeOp, StepPlan, WaitOp, resolve_handle
+from repro.core.stepplan import (
+    ComputeOp,
+    PrefillChunkCtx,
+    StepPlan,
+    WaitOp,
+    resolve_handle,
+)
 from repro.storage.timing import ChannelSim
 
 
@@ -384,7 +390,11 @@ class Scheduler:
         items = []
         for b in members:
             op = b.op
-            if op.phase == "prefill" and op.fn is None:
+            if (op.phase == "prefill" and op.fn is None
+                    and op.weight_key.startswith("layer:")):
+                # (weight_key-guarded: a sim hybrid *recompute* op also has
+                # phase="prefill" and fn=None, but is a complete step in
+                # itself — only layer-chunk streams drain.)
                 # drain: pull the plan's consecutive chunks of this layer
                 # into the same iteration while the token budget allows.
                 # Non-final chunks carry fn=None (pure occupancy), so their
@@ -724,6 +734,73 @@ class Scheduler:
                 active.remove(a)
                 self._finish_real(a, done, stop.value)
 
+    def _real_chunk_batch(self, active: List[_Active]) -> Optional[List[_Active]]:
+        """Assemble one real-mode batched prefill-chunk pass, or None.
+
+        Mirrors :meth:`_real_decode_batch` for the *final* chunk ops of
+        chunked prefill layers (the ones stamped with a
+        :class:`PrefillChunkCtx`): consecutive same-layer chunk ComputeOps
+        from different plans coalesce into one vmapped ``part_b_batch``
+        kernel call, streaming the layer's weights once.  Members must share
+        a backend, the layer and identical array shapes (``shape_key()``) —
+        the batched pass vmaps the single-request part-B, so ragged members
+        cannot mix.  Aging via ``batch_stamp`` keeps trimming fair, and a
+        single candidate returns None (standalone ``op.fn`` path, keeping
+        concurrency-1 bit-identical to ``drive_serial``).
+        """
+        if not self.batch_decode:
+            return None
+        cands = [a for a in active
+                 if isinstance(a.op, ComputeOp) and a.op.phase == "prefill"
+                 and isinstance(a.op.batch_ctx, PrefillChunkCtx)]
+        if len(cands) < 2:
+            return None
+        cands.sort(key=lambda a: (a.batch_stamp, a.request.request_id))
+        groups: Dict[tuple, List[_Active]] = {}
+        for a in cands:
+            ctx = a.op.batch_ctx
+            key = (id(ctx.backend), ctx.shape_key())
+            groups.setdefault(key, []).append(a)
+        members = min(groups.values(),
+                      key=lambda g: (g[0].batch_stamp, -len(g),
+                                     g[0].request.request_id))
+        if self.max_batch_tokens is not None:
+            budget, trimmed = 0, []
+            for a in members:
+                if budget + a.op.tokens > self.max_batch_tokens:
+                    break
+                trimmed.append(a)
+                budget += a.op.tokens
+            members = trimmed
+        return members if len(members) >= 2 else None
+
+    def _step_real_chunk_batch(self, members: List[_Active], active, done):
+        """One vmapped part-B pass for `members`' same-layer final chunks."""
+        ex = self.ex
+        ctxs = [a.op.batch_ctx for a in members]
+        be = ctxs[0].backend
+        flops = sum(a.op.flops for a in members)
+        weight = max(a.op.weight_bytes for a in members)
+        hbm = weight + sum(a.op.hbm_bytes - a.op.weight_bytes for a in members)
+        outs = ex.compute(lambda: be.part_b_batch(ctxs), flops=flops,
+                          hbm_bytes=hbm,
+                          tag=f"prefill_chunk[x{len(members)}]")
+        stamp = len(self.real_batch_log)
+        for a in members:
+            a.batch_stamp = stamp
+        self.batch_log.append(sum(a.op.tokens for a in members))
+        self.real_batch_log.append(
+            [(a.request.request_id, a.op.phase, a.op.weight_key)
+             for a in members])
+        for a, send in zip(members, outs):
+            a.plan.clock.t = ex.now()
+            try:
+                a.op = a.plan.gen.send(send)
+                self._observe_ttft(a)
+            except StopIteration as stop:
+                active.remove(a)
+                self._finish_real(a, done, stop.value)
+
     def _run_real(self, requests: List[Request]) -> List[CompletedRequest]:
         ex = self.ex
         pending = sorted(requests, key=lambda r: (r.arrival, r.request_id))
@@ -753,6 +830,16 @@ class Scheduler:
                         if isinstance(a.op, ComputeOp)
                         and a.op.phase == "decode"
                         and a.op.batch_ctx is not None}
+            # same-layer prefill chunk coalescing (disjoint from the decode
+            # batch: different phase, so no plan can be in both)
+            chunk_members = self._real_chunk_batch(active)
+            if chunk_members is not None:
+                self._step_real_chunk_batch(chunk_members, active, done)
+                progressed = True
+                skip |= {id(a) for a in active
+                         if isinstance(a.op, ComputeOp)
+                         and a.op.phase == "prefill"
+                         and isinstance(a.op.batch_ctx, PrefillChunkCtx)}
             for a in list(active):
                 if id(a) in skip:
                     continue

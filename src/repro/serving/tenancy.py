@@ -24,6 +24,7 @@ from repro.core.engine import (
     ContiguousKVEngine,
     IMPRESSEngine,
 )
+from repro.core.hybrid import HybridPlanner
 from repro.core.session import SyntheticWorkload, build_sim_session
 from repro.storage.timing import ChannelSim, DeviceModel
 
@@ -61,6 +62,7 @@ def build_sim_fleet(
     device_model: Optional[DeviceModel] = None,
     seed: int = 0,
     prefill_chunk_tokens: Optional[int] = None,
+    hybrid_reprefill: str = "off",
 ) -> TenantFleet:
     """Build `n_tenants` engines of one system sharing executor + cache.
 
@@ -71,6 +73,11 @@ def build_sim_fleet(
     cfg = get_config(model_name)
     executor = ChannelSim(device_model or DeviceModel())
     cls = ENGINE_CLASSES[system]
+    # one planner per fleet: the compute channel is shared, so the anti-herd
+    # reservation must see every tenant's recompute commitments
+    hybrid = (None if hybrid_reprefill == "off"
+              else HybridPlanner(hybrid_reprefill,
+                                 device_model=executor.model))
     shared_cache = None
     engines: Dict[int, object] = {}
     workloads: Dict[int, SyntheticWorkload] = {}
@@ -86,10 +93,12 @@ def build_sim_fleet(
                 shared_cache = AttentionGuidedCache(device_cap, host_cap)
             eng = cls(sess, be, executor, cache=shared_cache, budget=budget,
                       period=period, subperiod=subperiod,
-                      prefill_chunk_tokens=prefill_chunk_tokens)
+                      prefill_chunk_tokens=prefill_chunk_tokens,
+                      hybrid=hybrid)
         else:
             kw = dict(device_cap=device_cap, host_cap=host_cap,
-                      prefill_chunk_tokens=prefill_chunk_tokens)
+                      prefill_chunk_tokens=prefill_chunk_tokens,
+                      hybrid=hybrid)
             if system != "as_lru":
                 kw["budget"] = budget
             eng = cls(sess, be, executor, **kw)

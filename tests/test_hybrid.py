@@ -1,0 +1,342 @@
+"""Compute-or-load hybrid re-prefill: planner, parity and real-mode tests.
+
+Three layers of guarantees:
+
+- **Planner properties** (pure sim, no serving loop): the cost model is
+  additive in the recompute frontier, and ``auto``'s chosen cut is never
+  modeled slower than either pure mode — across SSD derates, channel
+  backlogs and missing-unit patterns.
+- **Sim parity**: ``force-load`` (and an ``auto`` run that never fires) is
+  bit-identical to running without a planner for all four engines — the
+  planner must be a pure overlay on the existing plan when it declines.
+- **Real mode**: a recomputed chunk's KV is bit-identical to the KV the
+  load path would have fetched from the store (causal truncation exactness),
+  and force-compute serves the same logits/greedy tokens as the plain
+  engine.  The real batch former's vmapped ``part_b_batch`` pass must not
+  change chunked-prefill logits either.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SyntheticWorkload, build_sim_session
+from repro.core import costmodel as CM
+from repro.core.backends import SimCompute
+from repro.core.hybrid import HYBRID_MODES, HybridPlanner
+from repro.serving import Request, Scheduler
+from repro.serving.tenancy import ENGINE_CLASSES, build_sim_fleet
+from repro.storage.timing import DeviceModel, SimExecutor
+
+MODEL = "qwen2.5-7b"
+KV_HEAVY = "qwen3-1.7b"  # 2x the KV bytes per forward FLOP of qwen2.5-7b
+PREFIX = 2048
+SYSTEMS = list(ENGINE_CLASSES)
+
+PAPER = DeviceModel(compute_flops=312e12, hbm_bandwidth=2.039e12)
+
+
+def _derated(model: DeviceModel, scale: float) -> DeviceModel:
+    return dataclasses.replace(model,
+                               ssd_bandwidth=model.ssd_bandwidth / scale,
+                               ssd_iops=model.ssd_iops / scale,
+                               ssd_latency=model.ssd_latency * scale)
+
+
+# --------------------------------------------------------------- cost model
+def test_chunk_recompute_cost_additive_in_frontier():
+    """cost(a, 0) + cost(b - a, a) == cost(b, 0) FLOP-wise: the identity
+    that lets the planner price any cut as one truncated forward."""
+    cfg = get_config(MODEL)
+    for a, b in ((64, 256), (128, 1024), (512, 2048)):
+        whole = CM.chunk_recompute_cost(cfg, b, 0)
+        head = CM.chunk_recompute_cost(cfg, a, 0)
+        rest = CM.chunk_recompute_cost(cfg, b - a, a)
+        # the embedding term (2*span*d_model) is span-additive too
+        np.testing.assert_allclose(head.flops + rest.flops, whole.flops,
+                                   rtol=1e-12)
+
+
+def test_chunk_recompute_cost_monotone_in_span():
+    cfg = get_config(MODEL)
+    costs = [CM.chunk_recompute_cost(cfg, s, 0).flops
+             for s in (16, 64, 256, 1024, 4096)]
+    assert costs == sorted(costs)
+    assert costs[0] > 0.0
+
+
+# ------------------------------------------------------- planner properties
+def _store(cfg, prefix_len=PREFIX, chunk_tokens=16):
+    return build_sim_session(cfg, prefix_len, chunk_tokens=chunk_tokens).store
+
+
+@pytest.mark.parametrize("model_name", [MODEL, KV_HEAVY])
+@pytest.mark.parametrize("scale", [1, 4, 16, 64])
+def test_auto_cut_never_modeled_worse_than_endpoints(model_name, scale):
+    """t_hybrid <= min(t_force_load, t_force_compute) for auto, across SSD
+    derates, channel backlogs and missing-set shapes.  The margin/overhead
+    premiums are priced INTO every cut, so the inequality is strict over
+    the planner's own objective, not an approximation."""
+    cfg = get_config(model_name)
+    store = _store(cfg)
+    n_units = store.layout.n_units
+    rng = np.random.default_rng(scale)
+    missing_sets = [
+        list(range(n_units)),                            # everything missing
+        list(range(0, n_units, 3)),                      # strided
+        sorted(rng.choice(n_units, size=max(2, n_units // 4),
+                          replace=False).tolist()),      # random sparse
+        [0],                                             # single head unit
+        [n_units - 1],                                   # single tail unit
+    ]
+    model = _derated(PAPER, scale)
+    for backlog in (0.0, 0.05, 0.5):
+        for suffix_len in (0, 256):
+            ex = SimExecutor(model)
+            ex.free_at["ssd"] = backlog
+            for missing in missing_sets:
+                hp = HybridPlanner("auto", device_model=model)
+                d = hp.decide(cfg=cfg, store=store, missing_units=missing,
+                              prefix_len=PREFIX, clock_t=0.0, executor=ex,
+                              suffix_len=suffix_len,
+                              attended_tokens=PREFIX + suffix_len)
+                lo = min(d.t_force_load, d.t_force_compute)
+                assert d.t_hybrid <= lo + 1e-12, (
+                    f"{model_name} x{scale} backlog={backlog} "
+                    f"missing={len(missing)}: hybrid {d.t_hybrid:.6f} > "
+                    f"endpoint {lo:.6f}")
+                # head + tail partition the missing set, in order
+                assert list(d.recompute_units) + list(d.load_units) == sorted(
+                    missing)
+
+
+def test_force_modes_pin_their_endpoint():
+    cfg = get_config(KV_HEAVY)
+    store = _store(cfg)
+    missing = list(range(store.layout.n_units))
+    for mode, pick in (("force-load", "t_force_load"),
+                       ("force-compute", "t_force_compute")):
+        hp = HybridPlanner(mode, device_model=PAPER)
+        d = hp.decide(cfg=cfg, store=store, missing_units=missing,
+                      prefix_len=PREFIX, executor=SimExecutor(PAPER))
+        assert d.t_hybrid == getattr(d, pick)
+    assert HybridPlanner("force-load", device_model=PAPER).decide(
+        cfg=cfg, store=store, missing_units=missing, prefix_len=PREFIX,
+        executor=SimExecutor(PAPER)).recompute_units == ()
+
+
+def test_planner_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        HybridPlanner("sometimes")
+    assert "off" in HYBRID_MODES
+
+
+def test_real_mode_ewma_scales_io_leg():
+    """Measured-slower-than-modeled IO (fed via observe_io) must shift the
+    crossover toward recompute in real mode (executor=None)."""
+    cfg = get_config(KV_HEAVY)
+    store = _store(cfg)
+    missing = list(range(store.layout.n_units))
+    hp = HybridPlanner("auto", device_model=PAPER)
+    base = hp.decide(cfg=cfg, store=store, missing_units=missing,
+                     prefix_len=PREFIX)
+    nb, nr = store.run_plan(0, missing)
+    modeled = (PAPER.ssd_read_time(nb, nr) + PAPER.pcie_time(nb))
+    hp.observe_io(nb, nr, 200.0 * modeled)  # IO measured 200x over model
+    slow = hp.decide(cfg=cfg, store=store, missing_units=missing,
+                     prefix_len=PREFIX)
+    assert hp.io_scale > 100.0
+    assert slow.t_force_load > base.t_force_load
+    assert len(slow.recompute_units) >= len(base.recompute_units)
+
+
+# ------------------------------------------------------------- sim parity
+def _serve(system, mode, *, model=MODEL, device_model=None, conc=2, n_req=6,
+           caps=(24, 48)):
+    fleet = build_sim_fleet(system, model, n_tenants=1, prefix_len=PREFIX,
+                            device_model=device_model, seed=0,
+                            device_cap=caps[0], host_cap=caps[1],
+                            hybrid_reprefill=mode)
+    sched = Scheduler(fleet.engines, max_concurrency=conc)
+    rng = np.random.default_rng(7)
+    t, reqs = 0.0, []
+    for i in range(n_req):
+        t += rng.exponential(0.05)
+        reqs.append(Request(request_id=i, suffix=np.arange(64) % 100,
+                            arrival=t, tenant=1))
+    return sched.run(reqs)
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_force_load_bit_identical_to_no_planner(system):
+    """mode=force-load must be a no-op overlay: identical timeline, stage
+    times and traffic for every engine vs hybrid_reprefill=off."""
+    ref = _serve(system, "off")
+    got = _serve(system, "force-load")
+    for r, g in zip(ref, got):
+        assert g.trace.ttft == r.trace.ttft, system
+        assert g.trace.stages == r.trace.stages, system
+        assert (g.trace.ssd_bytes, g.trace.ssd_requests,
+                g.trace.pcie_bytes) == (r.trace.ssd_bytes,
+                                        r.trace.ssd_requests,
+                                        r.trace.pcie_bytes), system
+        assert g.trace.recompute_units == 0
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_auto_on_cheap_io_is_silent_and_identical(system):
+    """On the paper device at 1x SSD, IO is cheaper than any truncated
+    forward: auto must decline everywhere and leave the plan untouched."""
+    ref = _serve(system, "off", device_model=PAPER)
+    got = _serve(system, "auto", device_model=PAPER)
+    for r, g in zip(ref, got):
+        assert g.trace.recompute_units == 0, system
+        assert g.trace.ttft == r.trace.ttft, system
+        assert g.trace.stages == r.trace.stages, system
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+@pytest.mark.parametrize("scale", [1, 16])
+def test_served_decisions_never_modeled_worse_than_endpoints(system, scale):
+    """Engine x workload form of the planner property: every decision an
+    engine actually records while serving (queue state and overlap credits
+    included) must satisfy t_hybrid <= min(force-load, force-compute)."""
+    done = _serve(system, "auto", model=KV_HEAVY,
+                  device_model=_derated(PAPER, scale), conc=4, n_req=8)
+    decisions = [c.trace.hybrid_decision for c in done
+                 if c.trace.hybrid_decision is not None]
+    assert decisions, f"{system}: no hybrid decision was ever consulted"
+    for d in decisions:
+        assert d.t_hybrid <= min(d.t_force_load, d.t_force_compute) + 1e-12
+
+
+def test_auto_beats_force_load_when_io_starved():
+    """The bench scenario in miniature: KV-heavy config, 16x-derated SSD,
+    concurrency 4 — auto must fire and cut P95 TTFT vs force-load."""
+    model = _derated(PAPER, 16)
+    kw = dict(model=KV_HEAVY, device_model=model, conc=4, n_req=16)
+    fl = _serve("contiguous_kv", "force-load", **kw)
+    au = _serve("contiguous_kv", "auto", **kw)
+    assert sum(c.trace.recompute_units for c in au) > 0
+    assert sum(c.trace.ssd_bytes_avoided for c in au) > 0
+    p95 = lambda done: sorted(c.trace.ttft for c in done)[
+        int(0.95 * (len(done) - 1))]
+    assert p95(au) < p95(fl)
+
+
+def test_force_compute_reads_no_ssd_for_missing_units():
+    """force-compute routes every cache-missing unit through the truncated
+    forward: the prefill's unit traffic must vanish from the SSD channel
+    (probe reads remain — importance scores aren't recomputable)."""
+    ref = _serve("contiguous_kv", "off", device_model=PAPER)
+    got = _serve("contiguous_kv", "force-compute", device_model=PAPER)
+    assert sum(c.trace.recompute_units for c in got) > 0
+    assert (sum(c.trace.ssd_bytes for c in got)
+            < sum(c.trace.ssd_bytes for c in ref))
+
+
+# --------------------------------------------------------------- real mode
+REAL_PREFIX = 128
+REAL_SUFFIX = 24
+REAL_DECODE = 3
+
+
+@pytest.fixture(scope="module")
+def real_stack():
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.core import build_real_session
+    from repro.models import transformer as T
+
+    cfg = reduced_config(MODEL, n_layers=2)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prefix = (np.arange(REAL_PREFIX) % cfg.vocab_size).astype(np.int64)
+    sess = build_real_session(cfg, params, prefix, chunk_tokens=16,
+                              in_memory=True)
+    return cfg, params, sess
+
+
+def _real_engine(real_stack, hybrid=None, **kw):
+    from repro.core import ContiguousKVEngine
+    from repro.core.backends import RealCompute
+    from repro.storage.timing import RealExecutor
+
+    cfg, params, sess = real_stack
+    return ContiguousKVEngine(sess, RealCompute(cfg, params), RealExecutor(),
+                              budget=0.5, period=2, subperiod=1,
+                              device_cap=64, host_cap=128, hybrid=hybrid,
+                              **kw)
+
+
+def test_real_recomputed_kv_bit_identical_to_store(real_stack):
+    """The tentpole's correctness core: a recomputed unit's fp16 KV must
+    equal the ChunkStore's ingested bytes exactly — causal attention over
+    a prefix head never sees the tail, so truncation is exact."""
+    cfg, _, sess = real_stack
+    eng = _real_engine(real_stack, hybrid=HybridPlanner("force-compute"))
+    suffix = (np.arange(REAL_SUFFIX) + 3) % cfg.vocab_size
+    _, tr = eng.reprefill(suffix, request_id=0)
+    assert tr.recompute_units > 0
+    store = sess.store
+    checked = 0
+    for u in tr.hybrid_decision.recompute_units:
+        for l in range(cfg.n_layers):
+            got = eng._data[eng._key(l, int(u))]
+            ref = store.read_units(l, [int(u)])[int(u)]
+            np.testing.assert_array_equal(got, ref,
+                                          err_msg=f"layer {l} unit {u}")
+            checked += 1
+    assert checked >= 2 * cfg.n_layers
+
+
+@pytest.mark.parametrize("mode", ["force-compute", "force-load", "auto"])
+def test_real_hybrid_serves_identical_logits(real_stack, mode):
+    """Every hybrid mode must serve the plain engine's exact logits and
+    greedy decode tokens: recompute changes WHERE KV comes from, never its
+    value."""
+    cfg = real_stack[0]
+    runs = {}
+    for hybrid in (None, HybridPlanner(mode)):
+        eng = _real_engine(real_stack, hybrid=hybrid)
+        out = []
+        for rid in range(2):
+            suffix = (np.arange(REAL_SUFFIX) + 3 * rid) % cfg.vocab_size
+            logits, tr = eng.reprefill(suffix, request_id=rid,
+                                       decode_tokens=REAL_DECODE)
+            out.append((np.asarray(logits), tr))
+        runs[hybrid is None] = out
+    for rid, ((ref_logits, ref_tr), (got_logits, got_tr)) in enumerate(
+            zip(runs[True], runs[False])):
+        np.testing.assert_array_equal(got_logits, ref_logits,
+                                      err_msg=f"{mode} req {rid}")
+        assert got_tr.decode_tokens_out == ref_tr.decode_tokens_out
+        if mode == "force-load":
+            assert got_tr.recompute_units == 0
+
+
+def test_real_chunk_batch_former_preserves_logits(real_stack):
+    """Satellite: the scheduler's vmapped part-B chunk batching at c=4 must
+    form real prefill-chunk batches and reproduce the unbatched logits."""
+    cfg = real_stack[0]
+
+    def serve(batched):
+        eng = _real_engine(real_stack, prefill_chunk_tokens=16)
+        sched = Scheduler(eng, max_concurrency=4, batch_decode=batched)
+        reqs = [Request(request_id=rid,
+                        suffix=(np.arange(REAL_SUFFIX) + 3 * rid)
+                        % cfg.vocab_size)
+                for rid in range(4)]
+        return sched.run(reqs), sched
+
+    done_b, sched_b = serve(True)
+    done_u, _ = serve(False)
+    prefill_batches = [b for b in sched_b.real_batch_log
+                       if any(phase == "prefill" for _, phase, _ in b)]
+    assert prefill_batches, "c=4 chunked prefill never formed a chunk batch"
+    assert all(len(b) >= 2 for b in prefill_batches)
+    for cb, cu in zip(done_b, done_u):
+        np.testing.assert_allclose(np.asarray(cb.result),
+                                   np.asarray(cu.result),
+                                   rtol=2e-5, atol=2e-5)

@@ -104,3 +104,60 @@ class TestSimExecutor:
         t_seq = m.ssd_read_time(4096 * 1000, n_requests=1)
         t_rand = m.ssd_read_time(4096 * 1000, n_requests=1000)
         assert t_rand > t_seq  # scattered requests cost IOPS
+
+
+class TestSsdReadTime:
+    """Pin ssd_read_time's per-batch fixed-latency semantics (the hybrid
+    planner prices its IO leg with them — a silent model change would move
+    the recompute crossover)."""
+
+    M = DeviceModel(ssd_bandwidth=1e9, ssd_iops=1e6, ssd_latency=50e-6,
+                    ssd_page=4096)
+
+    def test_latency_paid_once_per_batch_not_per_request(self):
+        m = self.M
+        one = m.ssd_read_time(m.ssd_page, n_requests=1)
+        many = m.ssd_read_time(64 * m.ssd_page, n_requests=64)
+        # 64 pipelined requests: 1 latency + 64x service, NOT 64 latencies
+        assert many == pytest.approx(
+            m.ssd_latency + 64 * m.ssd_page / m.ssd_bandwidth)
+        assert many < 64 * one
+
+    def test_batched_never_slower_than_split(self):
+        m = self.M
+        for nb, nr in ((3 * m.ssd_page, 3), (100 * m.ssd_page, 7),
+                       (m.ssd_page // 2, 1)):
+            whole = m.ssd_read_time(nb, nr)
+            for cut_b in (m.ssd_page, nb // 2):
+                cut_r = max(1, nr // 2)
+                split = (m.ssd_read_time(cut_b, cut_r)
+                         + m.ssd_read_time(max(nb - cut_b, 1), nr - cut_r)
+                         if nr - cut_r >= 1 else float("inf"))
+                assert whole <= split + 1e-15
+
+    def test_partial_page_rounds_up(self):
+        m = self.M
+        assert m.ssd_read_time(1) == m.ssd_read_time(m.ssd_page)
+        assert (m.ssd_read_time(m.ssd_page + 1)
+                == m.ssd_read_time(2 * m.ssd_page))
+
+    def test_iops_bandwidth_crossover(self):
+        m = self.M
+        pages = 10
+        nb = pages * m.ssd_page
+        # below the crossover, adding requests changes nothing...
+        bw_bound = pages * m.ssd_page / m.ssd_bandwidth
+        crossover = int(bw_bound * m.ssd_iops)
+        assert (m.ssd_read_time(nb, 1)
+                == m.ssd_read_time(nb, crossover))
+        # ...past it the transfer goes IOPS-bound and scales linearly
+        t2 = m.ssd_read_time(nb, 2 * crossover)
+        assert t2 == pytest.approx(m.ssd_latency
+                                   + 2 * crossover / m.ssd_iops)
+
+    def test_monotone_in_bytes_and_requests(self):
+        m = self.M
+        times_b = [m.ssd_read_time(n * m.ssd_page, 4) for n in range(1, 30)]
+        assert times_b == sorted(times_b)
+        times_r = [m.ssd_read_time(4 * m.ssd_page, r) for r in range(1, 600)]
+        assert times_r == sorted(times_r)
