@@ -13,7 +13,9 @@
 #                       benchmark with its decode/mixed gates runs once in
 #                       CI, inside bench-trend; local `verify-serving`
 #                       still runs both), plus verify-hybrid (the
-#                       compute-or-load hybrid re-prefill suite) in the
+#                       compute-or-load hybrid re-prefill suite) and
+#                       verify-disagg (prefill/decode disaggregation:
+#                       topology, KV handoff, real-mode bit-parity) in the
 #                       same serving-regression job;
 #   bench-trend       — the serving throughput benchmark (all of its
 #                       acceptance asserts) + its JSON vs the committed
@@ -37,6 +39,12 @@ SERVING_TESTS := tests/test_serving.py tests/test_serving_parity.py \
 # serving-regression CI job via verify-hybrid; ignored by verify-core-tests)
 HYBRID_TESTS := tests/test_hybrid.py
 
+# prefill/decode disaggregation: DisaggTopology parsing, sim KV-handoff +
+# worker routing, the worker-ratio sweep property, and the real-mode
+# pool-handoff bit-parity matrix (runs in the serving-regression CI job via
+# verify-disagg; ignored by verify-core-tests)
+DISAGG_TESTS := tests/test_disagg.py
+
 # the verify-kernels suite (its own CI job; ignored by verify-core-tests so
 # nothing runs twice): TailPool/DeviceTailPool equivalence tests, the
 # device-pool no-reupload/swap tests, and the decode_attention ragged-batch
@@ -45,8 +53,8 @@ KERNEL_TESTS := tests/test_kernels.py tests/test_tail_pool.py \
 	tests/test_device_pool.py
 
 .PHONY: verify verify-core verify-core-tests verify-kernels verify-serving \
-	verify-serving-tests verify-hybrid test bench-throughput \
-	bench-baseline bench-trend
+	verify-serving-tests verify-hybrid verify-disagg test \
+	bench-throughput bench-baseline bench-trend
 
 verify: test bench-throughput
 
@@ -60,10 +68,10 @@ verify-core-tests:
 	$(PY) -m pytest -q --durations=15 \
 		--deselect tests/test_sharded_sparse.py \
 		--deselect tests/test_sharding_small.py \
-		--deselect tests/test_checkpoint.py::TestCheckpoint::test_elastic_restore_onto_different_mesh \
 		$(addprefix --ignore=,$(SERVING_TESTS)) \
 		$(addprefix --ignore=,$(KERNEL_TESTS)) \
-		$(addprefix --ignore=,$(HYBRID_TESTS))
+		$(addprefix --ignore=,$(HYBRID_TESTS)) \
+		$(addprefix --ignore=,$(DISAGG_TESTS))
 
 # fast inner loop for kernel / TailPool / DeviceTailPool work
 verify-kernels:
@@ -75,7 +83,10 @@ verify-serving-tests:
 verify-hybrid:
 	$(PY) -m pytest -q --durations=15 $(HYBRID_TESTS)
 
-verify-serving: verify-serving-tests verify-hybrid
+verify-disagg:
+	$(PY) -m pytest -q --durations=15 $(DISAGG_TESTS)
+
+verify-serving: verify-serving-tests verify-hybrid verify-disagg
 	$(PY) benchmarks/bench_throughput.py --quick
 
 bench-throughput:

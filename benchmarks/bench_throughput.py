@@ -26,6 +26,12 @@ SSD bytes.  Gated: at the 16x point auto must beat force-load on P95 TTFT
 (``hybrid_speedup >= 1.0`` is additionally pinned by the bench-trend job);
 at 1x, where IO is cheap, auto must not fire at all (exact parity).
 
+A disaggregation section sweeps prefill:decode worker ratios (colocated,
+1:1, 2:1, 1:2) over one decode-heavy Poisson stream and reports P95 TTFT
+and handoff KV volume per split.  Gated: the best split must beat the
+colocated P95 TTFT (``best_split_p95_speedup > 1``, also pinned by
+bench-trend).
+
 A real-mode section serves a tiny real model (wall clock, interpret-mode
 Pallas kernels) at concurrency 4 with and without the real driver's
 batched paged decode attention and reports decode_tok_rate b=1 vs b<=4
@@ -68,7 +74,13 @@ from benchmarks.common import (  # noqa: E402
     Row,
     SYSTEMS,
 )
-from repro.serving import Request, Scheduler, poisson_arrivals, summarize
+from repro.serving import (
+    DisaggTopology,
+    Request,
+    Scheduler,
+    poisson_arrivals,
+    summarize,
+)
 from repro.serving.tenancy import build_sim_fleet
 
 
@@ -261,7 +273,68 @@ def run(quick: bool = False):
         "preemption did not improve SLO attainment under pressure")
 
     rows += _hybrid_sweep_rows()
+    rows += _disagg_sweep_rows()
     rows += _real_decode_rows(quick)
+    return rows
+
+
+def _disagg_sweep_rows():
+    """Worker-ratio sweep: colocated vs P:D disaggregated serving (sim).
+
+    A decode-heavy Poisson stream (16 decode tokens per request) on a
+    KV-heavy GQA config: colocated serving queues every long prefill
+    behind in-flight decode iterations on the single compute channel,
+    while a P:D split routes prefill to dedicated workers and pays an
+    explicit interconnect KV handoff per request.  The sweep serves the
+    identical request stream colocated and at 1:1 / 2:1 / 1:2 and reports
+    P95 TTFT per split plus the handoff byte volume.  Gated: the best
+    split must beat colocated P95 TTFT (the headline
+    ``best_split_p95_speedup`` is additionally pinned by the bench-trend
+    job).  The sim is deterministic, so the speedups are exact
+    run-to-run."""
+    model_name, prefix_len = "qwen3-1.7b", 512
+    n_req, rate, decode_tokens, conc = 16, 60.0, 16, 4
+
+    def serve(spec):
+        topo = DisaggTopology.parse(spec) if spec else None
+        fleet = build_sim_fleet("contiguous_kv", model_name, n_tenants=2,
+                                prefix_len=prefix_len, seed=0, topology=topo)
+        arrivals = poisson_arrivals(rate, n_req, seed=0)
+        reqs = [Request(request_id=i, suffix=np.arange(4) + i,
+                        tenant=1 + i % 2, arrival=float(arrivals[i]),
+                        decode_tokens=decode_tokens)
+                for i in range(n_req)]
+        sched = Scheduler(fleet.engines, topology=topo,
+                          max_concurrency=conc)
+        s = summarize(sched.run(reqs))
+        return s, sched
+
+    rows = []
+    colo, _ = serve(None)
+    rows.append(("serving/disagg/colocated/p95_ttft_ms",
+                 colo["p95_ttft"] * 1e3, "ms"))
+    best_spec, best_p95 = None, float("inf")
+    for spec in ("1:1", "2:1", "1:2"):
+        s, sched = serve(spec)
+        tag = f"serving/disagg/{spec.replace(':', 'p')}d"
+        rows += [
+            (f"{tag}/p95_ttft_ms", s["p95_ttft"] * 1e3, "ms"),
+            (f"{tag}/goodput_rps", s["goodput_rps"], "req/s"),
+            (f"{tag}/handoff_kv_mb", sched.handoff_bytes / 1e6, "MB"),
+        ]
+        assert sched.handoffs == n_req, (
+            f"disagg {spec}: {sched.handoffs} handoffs for {n_req} requests")
+        if s["p95_ttft"] < best_p95:
+            best_spec, best_p95 = spec, s["p95_ttft"]
+    rows += [
+        ("serving/disagg/best_split_p95_speedup",
+         colo["p95_ttft"] / best_p95, "x"),
+    ]
+    # acceptance gate: disaggregation must pay for its handoff under this
+    # decode-heavy load (enforced standalone + harness, pinned by check_trend)
+    assert best_p95 < colo["p95_ttft"], (
+        f"no P:D split beat colocated P95 TTFT: best {best_spec} "
+        f"{best_p95:.4f}s vs colocated {colo['p95_ttft']:.4f}s")
     return rows
 
 
@@ -610,7 +683,8 @@ def main():
           "batched decode beats unbatched at c4; chunked prefill mixing "
           "cuts p95 TTFT at c4; SLO pressure preempts; hybrid auto beats "
           "force-load at 16x-derated SSD and stays silent at 1x; "
-          "real-mode batched "
+          "a prefill:decode split beats colocated p95 TTFT under the "
+          "decode-heavy Poisson stream; real-mode batched "
           "decode raises decode_tok_rate; device-resident pools beat the "
           "host-resident path on the b=1 step rate and move no pool bytes "
           "over H2D")

@@ -43,6 +43,9 @@ DEFAULT_PATTERNS = (
     # deterministic sim: the 16x IO-constrained hybrid win must not erode
     # (the benchmark itself asserts > 1.02; this pins the achieved value)
     "serving/hybrid/x16/hybrid_speedup",
+    # deterministic sim: the best prefill:decode worker split's P95 TTFT
+    # win over colocated serving (the benchmark asserts > 1; this pins it)
+    "serving/disagg/best_split_p95_speedup",
 )
 
 

@@ -396,7 +396,8 @@ class _EngineBase:
                       prefix_len=self.session.prefix_len, clock_t=clock.t,
                       executor=self.ex if self.sim else None,
                       suffix_len=suffix_len, attended_tokens=attended,
-                      extra_overlap_flops=extra_overlap_flops)
+                      extra_overlap_flops=extra_overlap_flops,
+                      compute_channel=getattr(clock, "channel", "compute"))
         trace.hybrid_decision = d
         if not d.recompute_units:
             return
@@ -656,15 +657,21 @@ class _EngineBase:
                 ctx = DecodeBatchCtx(backend=be, token=tok, pos=pos,
                                      pools=pools)
 
-                def fn(tok_now=tok, pos=pos, pools=pools):
-                    h = be.embed(np.array([tok_now]))
+                def fn(tok_now=tok, pos=pos, pools=pools, ctx=ctx):
+                    # the backend comes off the ctx, not the closure: a
+                    # disaggregated scheduler reassigns ctx.backend at the
+                    # KV handoff, and the standalone path must follow the
+                    # plan onto the decode worker's engine just like the
+                    # batched path does
+                    bk = ctx.backend
+                    h = bk.embed(np.array([tok_now]))
                     masses = {}
                     for l in range(cfg.n_layers):
                         # traced positions: one jit entry for every step
-                        _, q, k_cur, v_cur = be.part_a_at(l, h, [[pos]])
+                        _, q, k_cur, v_cur = bk.part_a_at(l, h, [[pos]])
                         pools[l].append(k_cur, v_cur)
-                        h, masses[l] = be.decode_attend(l, h, q, pools[l])
-                    return be.logits(h), masses
+                        h, masses[l] = bk.decode_attend(l, h, q, pools[l])
+                    return bk.logits(h), masses
 
             out = yield ComputeOp(self._bound(request_id, fn) if fn else None,
                                   flops=cost.flops, hbm_bytes=cost.hbm_bytes,

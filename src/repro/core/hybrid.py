@@ -93,12 +93,28 @@ class HybridPlanner:
         # Anti-herd reservation (sim): concurrent requests decide before each
         # other's recompute ops reach the compute channel, so the channel's
         # `free_at` misses committed-but-unissued recompute work.  The shared
-        # planner tracks its own commitments' projected finish time.
-        self._reserved_until = 0.0
+        # planner tracks its own commitments' projected finish time, per
+        # compute channel (disaggregated fleets have one channel per worker).
+        # Reservations are sim-clock-scoped: `reset()` (called by the
+        # Scheduler at the start of every run) drops them so a fleet-shared
+        # planner reused across sim runs — whose clocks restart at 0 — does
+        # not carry a stale reservation that suppresses firing forever.
+        self._reserved_until: dict = {}
         # EWMA of measured / modeled IO service time (real mode only);
         # 1.0 until the first observation.
         self.io_scale = 1.0
         self.io_observations = 0
+
+    def reset(self):
+        """Drop sim-clock-scoped state (the anti-herd reservations).
+
+        The reservation is an absolute point on the *simulated* timeline;
+        a new run restarts that timeline at 0, so keeping the old value
+        would price every compute leg as blocked until the previous run's
+        finish time.  Real-mode calibration (`io_scale` EWMA) survives —
+        wall-clock IO behaviour does not reset between runs.
+        """
+        self._reserved_until.clear()
 
     # ---------------------------------------------------------------- real
     def observe_io(self, nbytes: int, n_requests: int, seconds: float):
@@ -156,7 +172,8 @@ class HybridPlanner:
                prefix_len: int, clock_t: float = 0.0,
                executor: Optional[ChannelSim] = None,
                suffix_len: int = 0, attended_tokens: int = 0,
-               extra_overlap_flops: float = 0.0) -> HybridDecision:
+               extra_overlap_flops: float = 0.0,
+               compute_channel: str = "compute") -> HybridDecision:
         """Walk every cut point over `missing_units` (ascending) and return
         the chosen head/tail split plus the modeled times of both pure modes.
 
@@ -166,6 +183,9 @@ class HybridPlanner:
         compute the request performs anyway, which hides that much of the IO
         leg's service time.  `extra_overlap_flops` adds engine-specific
         compute (e.g. per-period identification) to that credit.
+        `compute_channel` names the accelerator channel the request's ops run
+        on — "compute" for a colocated fleet, the assigned worker's channel
+        (e.g. "compute:p0") under a disaggregated topology.
         """
         missing = sorted(int(u) for u in set(missing_units))
         layout = store.layout
@@ -174,8 +194,9 @@ class HybridPlanner:
             model = executor.model
             wait_io = max(0.0, max(executor.free_at["ssd"],
                                    executor.free_at["pcie"]) - clock_t)
-            wait_cp = max(0.0, max(executor.free_at["compute"],
-                                   self._reserved_until) - clock_t)
+            wait_cp = max(0.0, max(executor.free_at.get(compute_channel, 0.0),
+                                   self._reserved_until.get(compute_channel,
+                                                            0.0)) - clock_t)
             # congestion inflation: decision-time backlog (`wait_io`) misses
             # the contention concurrent requests will add WHILE this
             # request's tail loads.  Scale it with the backlog itself, but
@@ -246,9 +267,9 @@ class HybridPlanner:
         if cut > 0 and executor is not None:
             # reserve the compute channel for this commitment: the chosen
             # cut's compute leg is priced to finish at clock_t + t_cp
-            self._reserved_until = max(self._reserved_until,
-                                       clock_t + self._compute_leg(
-                                           cfg, ends[cut], wait_cp, model))
+            self._reserved_until[compute_channel] = max(
+                self._reserved_until.get(compute_channel, 0.0),
+                clock_t + self._compute_leg(cfg, ends[cut], wait_cp, model))
         avoided = 0
         if head:
             nb_head, _ = store.run_plan(0, list(head))
@@ -262,3 +283,42 @@ class HybridPlanner:
             t_force_compute=costs[-1],
             ssd_bytes_avoided=avoided,
         )
+
+    # ---------------------------------------------------- disaggregation
+    def price_handoff(self, *, cfg: ModelConfig, nbytes: int, tokens: int,
+                      executor: ChannelSim, dst_channel: str,
+                      clock_t: float = 0.0,
+                      src_channel: str = "interconnect"):
+        """Price the prefill->decode KV handoff's two legs (sim only).
+
+        One more cut-point alternative, at the phase boundary instead of
+        inside the prefill: the decode worker either *pulls* the prefill
+        worker's KV over the interconnect FIFO (queue wait + transfer of
+        `nbytes`) or *recomputes* it locally with one truncated causal
+        forward over `tokens` prefix+suffix tokens (queue wait on the decode
+        worker's own compute channel, with the same margin/overhead pricing
+        as the in-prefill compute leg — and the same anti-herd reservation,
+        now keyed by the decode worker's channel).
+
+        Returns ``(choice, t_pull, t_recompute)`` with choice in
+        {"pull", "recompute"}.  Modes map naturally: "force-compute"
+        always recomputes, "off"/"force-load" always pull, "auto" takes
+        the cheaper leg.
+        """
+        model = executor.model
+        t_pull = (max(0.0, executor.free_at.get(src_channel, 0.0) - clock_t)
+                  + model.interconnect_time(nbytes))
+        wait_cp = max(0.0, max(executor.free_at.get(dst_channel, 0.0),
+                               self._reserved_until.get(dst_channel, 0.0))
+                      - clock_t)
+        t_rec = self._compute_leg(cfg, max(int(tokens), 1), wait_cp, model)
+        if self.mode == "force-compute":
+            choice = "recompute"
+        elif self.mode == "auto" and t_rec < t_pull:
+            choice = "recompute"
+        else:  # off / force-load / auto with pull cheaper
+            choice = "pull"
+        if choice == "recompute":
+            self._reserved_until[dst_channel] = max(
+                self._reserved_until.get(dst_channel, 0.0), clock_t + t_rec)
+        return choice, t_pull, t_rec

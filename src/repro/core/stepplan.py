@@ -30,12 +30,22 @@ from repro.storage.timing import IOHandle
 
 
 class RequestClock:
-    """Request-local virtual time (sim) / last-observed wall time (real)."""
+    """Request-local virtual time (sim) / last-observed wall time (real).
 
-    __slots__ = ("t",)
+    ``channel`` names the accelerator channel the request's compute ops
+    occupy: the shared ``"compute"`` channel by default, the assigned
+    worker's channel (``"compute:p0"``, ``"compute:d1"``, ...) once a
+    disaggregated scheduler routes the plan.  It rides on the clock because
+    the clock is the one per-request object both the scheduler (which
+    assigns workers) and the engine generator (which prices hybrid
+    decisions against the worker's backlog) already share.
+    """
 
-    def __init__(self, t: float = 0.0):
+    __slots__ = ("t", "channel")
+
+    def __init__(self, t: float = 0.0, channel: str = "compute"):
         self.t = t
+        self.channel = channel
 
     def __repr__(self):
         return f"RequestClock(t={self.t:.6f})"

@@ -5,6 +5,19 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """`axis_types=` kwargs for `jax.make_mesh`, feature-detected.
+
+    `jax.sharding.AxisType` only exists on newer jax; older versions (which
+    default every axis to what newer jax calls Auto) must not see the kwarg
+    at all.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False, kv_split: int = 0):
     """16x16 chips per pod (v5e); multi_pod adds a 2-pod leading axis.
 
@@ -29,11 +42,8 @@ def make_production_mesh(*, multi_pod: bool = False, kv_split: int = 0):
     for s in shape:
         n *= s
     devices = jax.devices()[:n]
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices,
-    )
+    return jax.make_mesh(shape, axes, devices=devices,
+                         **_axis_type_kwargs(len(axes)))
 
 
 def tp_axes(mesh) -> tuple:
@@ -50,10 +60,8 @@ def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / smoke runs)."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return jax.make_mesh((data, model), ("data", "model"),
+                         **_axis_type_kwargs(2))
 
 
 def dp_axes(mesh) -> tuple:

@@ -30,6 +30,15 @@ round-trips of the victim's device-resident TailPools in real mode (the
 digest prints preemption/swap counts and bytes either way).
 ``--host-tail-pool`` forces the PR-4 host-resident decode pools in real mode
 (per-step H2D re-upload) for comparison/debugging.
+
+``--disaggregate P:D`` splits serving into P prefill workers and D decode
+workers with an explicit KV-handoff channel.  Sim mode models each worker as
+its own FIFO compute channel plus one shared interconnect; real mode builds D
+extra backend instances (sharing the colocated params, so logits stay
+bit-identical) and hands each plan's device tail pools across at the
+prefill/decode boundary via the PR-5 swap_out/swap_in contract.  The digest
+adds handoff counts/bytes and (sim, with ``--hybrid-reprefill``) how many
+handoffs the planner priced as decode-side recompute instead of a KV pull.
 """
 from __future__ import annotations
 
@@ -39,12 +48,27 @@ import numpy as np
 
 from repro.serving import (
     POLICIES,
+    DisaggTopology,
     Request,
     Scheduler,
     make_arrivals,
     summarize,
 )
 from repro.serving.tenancy import ENGINE_CLASSES, build_sim_fleet
+
+
+def _print_handoff_digest(sched):
+    if sched.topology is None:
+        return
+    topo = sched.topology
+    print(f"disaggregated {topo.n_prefill}P:{topo.n_decode}D: "
+          f"handoffs={sched.handoffs} "
+          f"kv_bytes={sched.handoff_bytes/1e6:.2f}MB", end="")
+    if sched.handoff_recomputes:
+        print(f" (+{sched.handoff_recomputes} priced as decode-side "
+              f"recompute, {sched.handoff_bytes_avoided/1e6:.2f}MB "
+              f"interconnect avoided)", end="")
+    print()
 
 
 def _real_main(args):
@@ -81,6 +105,15 @@ def _real_main(args):
         kw.update(budget=args.budget)
     eng = ENGINE_CLASSES[args.system](sess, RealCompute(cfg, params), ex, **kw)
 
+    topology = None
+    if args.disaggregate:
+        topology = DisaggTopology.parse(args.disaggregate)
+        # decode workers share the colocated params: bit-identical logits
+        topology.decode_backends = [RealCompute(cfg, params)
+                                    for _ in range(topology.n_decode)]
+        print(f"disaggregating: {topology.n_prefill} prefill / "
+              f"{topology.n_decode} decode workers (pool handoff)")
+
     requests = [Request(request_id=rid, suffix=suffix,
                         decode_tokens=args.decode_tokens,
                         ttft_target=args.ttft_slo)
@@ -90,7 +123,8 @@ def _real_main(args):
                       max_batch_tokens=args.max_batch_tokens,
                       preempt=args.preempt,
                       swap_on_preempt=args.swap_on_preempt,
-                      prefill_estimate=args.prefill_estimate)
+                      prefill_estimate=args.prefill_estimate,
+                      topology=topology)
     completed = sched.run(requests)
 
     correct = 0
@@ -126,6 +160,7 @@ def _real_main(args):
         pools = "host" if args.host_tail_pool else "device"
         print(f"preemptions={s['preemptions']} swaps={s['swaps']} "
               f"swap_bytes={sched.swap_bytes/1e6:.2f}MB ({pools} tail pools)")
+    _print_handoff_digest(sched)
     if args.decode_tokens == 0:
         # with decode, c.result is the *last* token's logits, not the label
         print(f"label-token accuracy (untrained model => chance-level): "
@@ -133,12 +168,15 @@ def _real_main(args):
 
 
 def _sim_main(args):
+    topology = (DisaggTopology.parse(args.disaggregate)
+                if args.disaggregate else None)
     fleet = build_sim_fleet(args.system, args.model, n_tenants=args.tenants,
                             prefix_len=args.prefix_len, budget=args.budget,
                             period=args.period, subperiod=args.subperiod,
                             device_cap=args.device_cap, host_cap=args.host_cap,
                             prefill_chunk_tokens=args.prefill_chunk_tokens,
-                            hybrid_reprefill=args.hybrid_reprefill)
+                            hybrid_reprefill=args.hybrid_reprefill,
+                            topology=topology)
     arrivals = make_arrivals(args.arrival, args.rate, args.requests, seed=0)
     rng = np.random.default_rng(0)
     requests = [
@@ -155,7 +193,8 @@ def _sim_main(args):
                       max_batch_tokens=args.max_batch_tokens,
                       preempt=args.preempt,
                       swap_on_preempt=args.swap_on_preempt,
-                      prefill_estimate=args.prefill_estimate)
+                      prefill_estimate=args.prefill_estimate,
+                      topology=topology)
     completed = sched.run(requests)
     for c in completed:
         tr = c.trace
@@ -186,6 +225,7 @@ def _sim_main(args):
         avoided = sum(c.trace.ssd_bytes_avoided for c in completed)
         print(f"hybrid re-prefill: {rec_units} units recomputed, "
               f"{avoided/1e6:.2f}MB SSD reads avoided")
+    _print_handoff_digest(sched)
     usage = fleet.cache.tenant_usage()
     for tenant in sorted(usage):
         u = usage[tenant]
@@ -232,6 +272,11 @@ def main():
     p.add_argument("--prefill-estimate", type=float, default=None,
                    help="floor (seconds) for the projected prefill service "
                         "time; the first-token EWMA raises it")
+    p.add_argument("--disaggregate", default=None, metavar="P:D",
+                   help="split serving into P prefill + D decode workers "
+                        "with a KV-handoff channel (sim: per-worker FIFO "
+                        "channels + interconnect; real: extra decode "
+                        "backends + tail-pool handoff)")
     # real mode
     p.add_argument("--arch", default="qwen2.5-14b")
     p.add_argument("--dataset", default="rte")

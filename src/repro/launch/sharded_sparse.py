@@ -31,6 +31,19 @@ from repro.models.transformer import _ffn, _logits
 NEG_INF = -1e30
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat shard_map: top-level `jax.shard_map` (new jax, with
+    `check_vma`) or `jax.experimental.shard_map.shard_map` (older jax,
+    where the same knob is called `check_rep`)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+
+    return legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)
+
+
 def _local_sparse_attention(q, k_shard, v_shard, kmean_shard, k_new, v_new,
                             length, *, cfg: ModelConfig, chunk_tokens: int,
                             k_sel: int, seq_axes: Tuple[str, ...]):
@@ -131,11 +144,10 @@ def make_sharded_sparse_decode_step(cfg: ModelConfig, mesh, *,
             _local_sparse_attention, cfg=cfg, chunk_tokens=chunk_tokens,
             k_sel=k_sel, seq_axes=seq_axes)
         kv_spec = P(None, seq_axes, None, None)
-        sharded = jax.shard_map(
+        sharded = _shard_map(
             inner, mesh=mesh,
             in_specs=(P(), kv_spec, kv_spec, kv_spec, P(), P(), P()),
             out_specs=(P(), kv_spec, kv_spec, kv_spec),
-            check_vma=False,
         )
 
         xs = {"lp": params["layers"], "k": state["k"], "v": state["v"],

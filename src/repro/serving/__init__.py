@@ -6,7 +6,8 @@ repro.storage.timing (ChannelSim shared-FIFO discrete-event core):
   arrivals  — Poisson / burst / uniform arrival processes;
   scheduler — Scheduler + admission policies (FCFS, cache-aware affinity),
               Request/CompletedRequest, run summaries;
-  tenancy   — multi-tenant fleets: N prefixes, one shared cache/executor.
+  tenancy   — multi-tenant fleets: N prefixes, one shared cache/executor;
+  disagg    — prefill/decode worker topology + KV-handoff channel.
 """
 from repro.serving.arrivals import (
     burst_arrivals,
@@ -14,6 +15,7 @@ from repro.serving.arrivals import (
     poisson_arrivals,
     uniform_arrivals,
 )
+from repro.serving.disagg import INTERCONNECT, DisaggTopology
 from repro.serving.scheduler import (
     POLICIES,
     CacheAffinityPolicy,
@@ -31,6 +33,8 @@ __all__ = [
     "make_arrivals",
     "poisson_arrivals",
     "uniform_arrivals",
+    "INTERCONNECT",
+    "DisaggTopology",
     "POLICIES",
     "CacheAffinityPolicy",
     "CompletedRequest",

@@ -1,0 +1,93 @@
+"""Prefill/decode disaggregation: worker topology + KV-handoff channel.
+
+A disaggregated fleet splits serving into *prefill workers* (IO/compute
+heavy: probe reads, unit loads, chunked part-B) and *decode workers*
+(weight-stream bound: one token per iteration over a paged tail pool),
+connected by an explicit KV-transfer link — the architecture of
+splitwise-style serving (SNIPPETS.md snippets 1-3: vllm disaggregated
+prefill/decode with KVTransferConfig producer/consumer roles).  Colocating
+the two phases on one accelerator makes each steal the other's bottleneck
+resource (the interference arXiv:2601.19910 quantifies); splitting them
+means a long prefill never sits in front of another request's decode
+iteration.
+
+Sim mode: each worker is one more FIFO compute channel on the shared
+:class:`repro.storage.timing.ChannelSim` ("compute:p0", ..., "compute:d0",
+...) plus a single "interconnect" FIFO for the prefill->decode KV handoff.
+The Scheduler routes every plan's prefill ops to the least-backlogged
+prefill worker, and at the phase boundary (first op after ``trace.ttft``)
+emits a ``kv_handoff`` WaitOp priced by the plan's resident-KV bytes over
+the interconnect, then resumes the decode-phase ops on a decode worker.
+
+Real mode: ``decode_backends`` carries one
+:class:`repro.core.backends.RealCompute` instance per decode worker
+(sharing the colocated engine's params, so logits stay bit-identical); the
+handoff reuses PR-5's pool serialization — the plan's per-layer
+``DeviceTailPool``s are snapshotted to host (``swap_out``) and re-uploaded
+(``swap_in``), which is exactly the D2H + H2D round trip a cross-worker
+transfer performs, and the plan's ``DecodeBatchCtx.backend`` is switched to
+the decode worker's instance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.storage.timing import ChannelSim
+
+INTERCONNECT = "interconnect"
+
+
+def prefill_channel(i: int) -> str:
+    return f"compute:p{i}"
+
+
+def decode_channel(i: int) -> str:
+    return f"compute:d{i}"
+
+
+@dataclasses.dataclass
+class DisaggTopology:
+    """One prefill/decode worker split.
+
+    ``n_prefill``/``n_decode`` size the two worker pools (sim mode models
+    each as its own compute channel).  ``decode_backends`` (real mode) maps
+    decode worker -> its backend instance; when set, its length overrides
+    ``n_decode`` and the sim channels are unused.
+    """
+
+    n_prefill: int = 1
+    n_decode: int = 1
+    decode_backends: Optional[List[object]] = None
+
+    def __post_init__(self):
+        if self.decode_backends is not None:
+            self.n_decode = len(self.decode_backends)
+        assert self.n_prefill >= 1 and self.n_decode >= 1, (
+            self.n_prefill, self.n_decode)
+
+    @classmethod
+    def parse(cls, spec: str) -> "DisaggTopology":
+        """Parse a ``--disaggregate P:D`` worker-ratio spec like "2:1"."""
+        try:
+            p, d = spec.split(":")
+            return cls(n_prefill=int(p), n_decode=int(d))
+        except (ValueError, AssertionError):
+            raise ValueError(
+                f"--disaggregate expects P:D with positive integers, "
+                f"got {spec!r}") from None
+
+    @property
+    def prefill_channels(self) -> List[str]:
+        return [prefill_channel(i) for i in range(self.n_prefill)]
+
+    @property
+    def decode_channels(self) -> List[str]:
+        return [decode_channel(i) for i in range(self.n_decode)]
+
+    def attach_sim(self, ex: ChannelSim):
+        """Register the per-worker compute channels + the interconnect FIFO
+        on a ChannelSim (idempotent; base ssd/pcie/compute stay untouched)."""
+        for name in self.prefill_channels + self.decode_channels:
+            ex.add_channel(name)
+        ex.add_channel(INTERCONNECT)

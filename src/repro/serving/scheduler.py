@@ -62,15 +62,18 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core import costmodel as CM
 from repro.core.cache import DEVICE, HOST
 from repro.core.stepplan import (
     ComputeOp,
+    DecodeBatchCtx,
     PrefillChunkCtx,
     StepPlan,
     WaitOp,
     resolve_handle,
 )
-from repro.storage.timing import ChannelSim
+from repro.serving.disagg import INTERCONNECT, DisaggTopology
+from repro.storage.timing import ChannelSim, IOHandle
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +182,7 @@ POLICIES = {"fcfs": FCFSPolicy, "cache_aware": CacheAffinityPolicy,
 class _Active:
     __slots__ = ("request", "plan", "op", "resume", "admitted",
                  "preempt_count", "swap_count", "swapped_bytes", "ttft_seen",
-                 "batch_stamp")
+                 "batch_stamp", "held_op", "handed_off", "worker_backend")
 
     def __init__(self, request: Request, plan: StepPlan, admitted: float):
         self.request = request
@@ -192,6 +195,9 @@ class _Active:
         self.swapped_bytes = 0  # bytes swapped out, re-fetched on resume
         self.ttft_seen = False  # first token already fed the prefill EWMA
         self.batch_stamp = -1  # last real-driver iteration this plan batched
+        self.held_op = None  # op parked behind a kv_handoff WaitOp (disagg)
+        self.handed_off = False  # prefill->decode handoff already emitted
+        self.worker_backend = None  # real decode worker backend after handoff
 
 
 # ---------------------------------------------------------------------------
@@ -209,7 +215,8 @@ class Scheduler:
                  max_concurrency: int = 4, batch_decode: bool = True,
                  max_batch_tokens: Optional[int] = None,
                  preempt: bool = False, swap_on_preempt: bool = False,
-                 prefill_estimate: Optional[float] = None):
+                 prefill_estimate: Optional[float] = None,
+                 topology: Optional[DisaggTopology] = None):
         if not isinstance(engines, dict):
             engines = {getattr(engines, "tenant", 0): engines}
         assert engines, "need at least one engine"
@@ -248,11 +255,36 @@ class Scheduler:
         # weight_key), ...] — the regression suite asserts batches never mix
         # phases/weight streams and never run a request's op twice
         self.real_batch_log: List[List[tuple]] = []
+        # prefill/decode disaggregation (None = colocated single worker).
+        # Sim: per-worker compute channels + the interconnect FIFO are
+        # registered on the shared ChannelSim; real: decode_backends carries
+        # one backend instance per decode worker and the handoff reuses the
+        # PR-5 pool swap_out/swap_in serialization.
+        self.topology = topology
+        if topology is not None and isinstance(self.ex, ChannelSim):
+            topology.attach_sim(self.ex)
+        self.handoffs = 0
+        self.handoff_bytes = 0  # bytes moved over the handoff link
+        self.handoff_recomputes = 0  # handoffs the planner turned into
+        self.handoff_bytes_avoided = 0  # ... decode-worker recomputes
+        self._rr_decode = 0  # real mode: round-robin decode-worker pick
 
     def run(self, requests: Sequence[Request]) -> List[CompletedRequest]:
         requests = list(requests)
+        # per-run scoping of the hybrid planners' anti-herd reservations:
+        # a fleet-shared planner outlives the run, but its reservations are
+        # points on this run's clock — a sim rerun restarts at t=0 and must
+        # not see the previous run's (now far-future) commitments
+        for hp in {id(hp): hp for hp in
+                   (getattr(e, "hybrid", None) for e in self.engines.values())
+                   if hp is not None}.values():
+            hp.reset()
         if isinstance(self.ex, ChannelSim):
             return self._run_sim(requests)
+        if (self.topology is not None
+                and not self.topology.decode_backends):
+            raise ValueError("real-mode disaggregation needs "
+                             "DisaggTopology.decode_backends")
         return self._run_real(requests)
 
     # -- discrete-event driver (sim) ------------------------------------------
@@ -328,7 +360,8 @@ class Scheduler:
         if not (self.batch_decode and isinstance(a.op, ComputeOp)
                 and a.op.tokens > 0):
             return None
-        gate = max(a.resume, self.ex.free_at["compute"])
+        chan = a.plan.clock.channel
+        gate = max(a.resume, self.ex.free_at[chan])
         window = gate + self.ex.model.compute_time(a.op.flops, a.op.hbm_bytes)
         while True:
             waiting = [b for b in active
@@ -337,12 +370,16 @@ class Scheduler:
             if not waiting:
                 break
             b = min(waiting, key=lambda x: x.resume)
+            if b.held_op is not None and b.op.tag == "kv_handoff":
+                self._release_handoff(b)
+                continue
             b.plan.clock.t = b.resume
             send = resolve_handle(b.op.handle)
             try:
                 b.op = b.plan.gen.send(send)
                 b.resume = b.plan.resume_time(b.op)
                 self._observe_ttft(b)
+                self._maybe_handoff_sim(b)
             except StopIteration as stop:
                 active.remove(b)
                 self._finish_sim(b, b.plan.clock.t, slots, done, stop.value)
@@ -356,12 +393,18 @@ class Scheduler:
                 total += b.op.tokens
             return members, total
 
+        # an iteration is one occupation of ONE worker's accelerator: under
+        # a disaggregated topology only plans routed to the same channel may
+        # coalesce (a colocated fleet has a single shared channel, so the
+        # filter is vacuous there)
+        same = lambda b: b.plan.clock.channel == chan
         order = lambda b: (b is not a, b.resume, b.request.request_id)
         if a.op.phase == "decode":
             decode_cands = sorted(
                 (b for b in active
                  if isinstance(b.op, ComputeOp) and b.op.tokens > 0
-                 and b.op.phase == "decode" and b.resume <= window),
+                 and b.op.phase == "decode" and b.resume <= window
+                 and same(b)),
                 key=order)
             members, total = trim(decode_cands, [], 0)
             # prefill chunks ride only if already runnable at the iteration's
@@ -371,14 +414,16 @@ class Scheduler:
             riders = sorted(
                 (b for b in active
                  if isinstance(b.op, ComputeOp) and b.op.tokens > 0
-                 and b.op.phase == "prefill" and b.resume <= start),
+                 and b.op.phase == "prefill" and b.resume <= start
+                 and same(b)),
                 key=order)
             members, _ = trim(riders, members, total)
             return members
         cands = sorted(
             (b for b in active
              if isinstance(b.op, ComputeOp) and b.op.tokens > 0
-             and b.op.weight_key == a.op.weight_key and b.resume <= window),
+             and b.op.weight_key == a.op.weight_key and b.resume <= window
+             and same(b)),
             key=order)
         members, _ = trim(cands, [], 0)
         return members
@@ -422,13 +467,16 @@ class Scheduler:
                 items.append((op.fn, op.flops, op.hbm_bytes, op.weight_bytes))
         tag = members[0].op.tag if len(phases) == 1 else "mixed"
         self.batch_log.append(total)
-        outs, end = self.ex.compute_batch_at(items, tag=tag, at=start)
+        outs, end = self.ex.compute_batch_at(
+            items, tag=tag, at=start,
+            channel=members[0].plan.clock.channel)
         for b, send in zip(members, outs):
             b.plan.clock.t = end
             try:
                 b.op = b.plan.gen.send(send)
                 b.resume = b.plan.resume_time(b.op)
                 self._observe_ttft(b)
+                self._maybe_handoff_sim(b)
             except StopIteration as stop:
                 active.remove(b)
                 self._finish_sim(b, end, slots, done, stop.value)
@@ -438,6 +486,13 @@ class Scheduler:
         eng = self.engines[req.tenant]
         plan = eng.plan(req.suffix, req.request_id, arrival=start,
                         decode_tokens=req.decode_tokens)
+        if self.topology is not None:
+            # route the prefill phase to the least-backlogged prefill
+            # worker; the channel must be pinned before the generator's
+            # first resume, which already prices ops against it
+            plan.clock.channel = min(
+                self.topology.prefill_channels,
+                key=lambda c: (self.ex.free_at[c], c))
         a = _Active(req, plan, start)
         try:
             a.op = plan.gen.send(None)
@@ -445,7 +500,79 @@ class Scheduler:
             self._finish_sim(a, start, slots, done, stop.value)
             return
         a.resume = plan.resume_time(a.op)
+        self._maybe_handoff_sim(a)
         active.append(a)
+
+    def _handoff_payload(self, a: _Active):
+        """(bytes, tokens) of one prefill->decode KV handoff: the resident
+        prefix units every decode step attends over, plus the suffix (and
+        first-token) KV tail — i.e. everything the decode worker needs that
+        only exists on the prefill worker.  `tokens` is the causal extent a
+        decode-worker recompute would have to cover to rebuild the same KV."""
+        eng = self.engines[a.request.tenant]
+        layout = eng.session.store.layout
+        sel = a.plan.trace.selected_per_layer
+        max_unit = max((int(u) for us in sel.values() for u in us),
+                       default=-1)
+        prefix_tokens = min((max_unit + 1) * layout.unit_tokens,
+                            eng.session.prefix_len)
+        suffix_tokens = len(a.request.suffix)
+        nbytes = (self._resident_bytes(a)
+                  + suffix_tokens * layout.geom.token_bytes * layout.n_layers)
+        return int(nbytes), int(prefix_tokens + suffix_tokens)
+
+    def _maybe_handoff_sim(self, a: _Active):
+        """Emit the ``kv_handoff`` WaitOp at the prefill->decode boundary.
+
+        Fires once per plan, at the first op yielded after the generator
+        stamped ``trace.ttft`` (prefill done, decode pending).  The pending
+        op is parked on ``a.held_op`` behind a WaitOp whose handle is the
+        transfer's completion on the interconnect FIFO — or, when the
+        fleet's HybridPlanner prices a decode-worker recompute cheaper than
+        pulling the bytes, an occupation of the decode worker's own compute
+        channel.  Either way the plan's clock is re-routed to the chosen
+        decode worker, so every decode-phase op runs there.
+        """
+        if (self.topology is None or a.handed_off
+                or not getattr(a.plan.trace, "ttft", 0.0)):
+            return
+        a.handed_off = True
+        self.handoffs += 1
+        eng = self.engines[a.request.tenant]
+        clock = a.plan.clock
+        dst = min(self.topology.decode_channels,
+                  key=lambda c: (self.ex.free_at[c], c))
+        nbytes, tokens = self._handoff_payload(a)
+        hp = getattr(eng, "hybrid", None)
+        choice = "pull"
+        if hp is not None and hp.mode != "off" and nbytes and tokens:
+            choice, _, t_rec = hp.price_handoff(
+                cfg=eng.cfg, nbytes=nbytes, tokens=tokens, executor=self.ex,
+                dst_channel=dst, clock_t=clock.t)
+        if choice == "recompute":
+            cost = CM.chunk_recompute_cost(eng.cfg, tokens, 0)
+            _, end = self.ex.compute_at(
+                None, flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                tag="handoff_recompute", at=clock.t, channel=dst)
+            handle = IOHandle(ready_at=end)
+            self.handoff_recomputes += 1
+            self.handoff_bytes_avoided += nbytes
+        else:
+            handle = self.ex.submit_io_at(
+                None, nbytes=nbytes, n_requests=1, channel=INTERCONNECT,
+                at=clock.t)
+            self.handoff_bytes += nbytes
+        a.held_op = a.op
+        a.op = WaitOp(handle, tag="kv_handoff")
+        clock.channel = dst
+        a.resume = a.plan.resume_time(a.op)
+
+    def _release_handoff(self, a: _Active):
+        """The kv_handoff WaitOp completed: un-park the held decode op."""
+        a.plan.clock.t = a.resume
+        a.op = a.held_op
+        a.held_op = None
+        a.resume = a.plan.resume_time(a.op)
 
     def _admit_sim(self, pending, active, slots, done):
         while pending and len(active) < self.max_concurrency:
@@ -572,16 +699,22 @@ class Scheduler:
         if isinstance(op, ComputeOp):
             out, end = self.ex.compute_at(op.fn, flops=op.flops,
                                           hbm_bytes=op.hbm_bytes, tag=op.tag,
-                                          at=a.resume)
+                                          at=a.resume, channel=clock.channel)
             clock.t = end
             send = out
         else:
+            if a.held_op is not None and op.tag == "kv_handoff":
+                # scheduler-emitted wait: the generator never yielded it,
+                # so un-park the held decode op instead of resuming the gen
+                self._release_handoff(a)
+                return
             clock.t = a.resume  # = max(clock, handle.ready_at)
             send = resolve_handle(op.handle)
         try:
             a.op = a.plan.gen.send(send)
             a.resume = a.plan.resume_time(a.op)
             self._observe_ttft(a)
+            self._maybe_handoff_sim(a)
         except StopIteration as stop:
             active.remove(a)
             self._finish_sim(a, clock.t, slots, done, stop.value)
@@ -605,9 +738,44 @@ class Scheduler:
         a = _Active(req, plan, plan.clock.t)
         try:
             a.op = plan.gen.send(None)
+            self._maybe_handoff_real(a)
             active.append(a)
         except StopIteration as stop:
             self._finish_real(a, done, stop.value)
+
+    def _maybe_handoff_real(self, a: _Active):
+        """Real-mode prefill->decode handoff + decode-worker stamping.
+
+        Fires at the plan's first decode-phase op (the op that carries a
+        :class:`DecodeBatchCtx`): the per-layer tail pools built on the
+        prefill engine are serialized to host and re-uploaded — PR-5's
+        ``swap_out``/``swap_in`` round trip, which is byte-for-byte the
+        D2H + H2D legs of a cross-worker transfer and is pinned
+        bit-identical by the device-pool suite — and the plan is assigned a
+        decode-worker backend (round-robin).  Every subsequent decode op's
+        ``batch_ctx.backend`` is restamped to that worker, so both the
+        batched kernel pass and the standalone ``op.fn`` path run on the
+        decode worker's engine, and the batch former groups plans by decode
+        worker exactly like the sim driver's per-worker channels.
+        """
+        if (self.topology is None or self.topology.decode_backends is None
+                or not isinstance(a.op, ComputeOp)
+                or not isinstance(a.op.batch_ctx, DecodeBatchCtx)):
+            return
+        ctx = a.op.batch_ctx
+        if not a.handed_off:
+            a.handed_off = True
+            self.handoffs += 1
+            backends = self.topology.decode_backends
+            a.worker_backend = backends[self._rr_decode % len(backends)]
+            self._rr_decode += 1
+            # the transfer: snapshot the pools off the prefill worker's
+            # device and restore them on the decode worker's (both legs
+            # accounted, like the preemption swap)
+            out_bytes = sum(p.swap_out() for p in ctx.pools.values())
+            in_bytes = sum(p.swap_in() for p in ctx.pools.values())
+            self.handoff_bytes += out_bytes + in_bytes
+        ctx.backend = a.worker_backend
 
     def _preempt_real(self, pending, active, preempted, t0: float, done):
         """SLO-driven preemption for the wall-clock driver.
@@ -730,6 +898,7 @@ class Scheduler:
             try:
                 a.op = a.plan.gen.send(send)
                 self._observe_ttft(a)
+                self._maybe_handoff_real(a)
             except StopIteration as stop:
                 active.remove(a)
                 self._finish_real(a, done, stop.value)
@@ -797,6 +966,7 @@ class Scheduler:
             try:
                 a.op = a.plan.gen.send(send)
                 self._observe_ttft(a)
+                self._maybe_handoff_real(a)
             except StopIteration as stop:
                 active.remove(a)
                 self._finish_real(a, done, stop.value)
@@ -857,6 +1027,7 @@ class Scheduler:
                 try:
                     a.op = a.plan.gen.send(send)
                     self._observe_ttft(a)
+                    self._maybe_handoff_real(a)
                 except StopIteration as stop:
                     active.remove(a)
                     self._finish_real(a, done, stop.value)

@@ -26,6 +26,7 @@ from repro.core.engine import (
 )
 from repro.core.hybrid import HybridPlanner
 from repro.core.session import SyntheticWorkload, build_sim_session
+from repro.serving.disagg import DisaggTopology
 from repro.storage.timing import ChannelSim, DeviceModel
 
 ENGINE_CLASSES = {
@@ -38,12 +39,19 @@ ENGINE_CLASSES = {
 
 @dataclasses.dataclass
 class TenantFleet:
-    """One serving deployment: per-tenant engines over shared resources."""
+    """One serving deployment: per-tenant engines over shared resources.
+
+    ``topology`` (optional) is the fleet's prefill/decode worker split; its
+    per-worker compute channels + interconnect FIFO are registered on
+    ``executor`` at build time, and a Scheduler built over this fleet should
+    receive the same object.
+    """
 
     engines: Dict[int, object]
     executor: ChannelSim
     cache: object
     workloads: Dict[int, SyntheticWorkload]
+    topology: Optional[DisaggTopology] = None
 
 
 def build_sim_fleet(
@@ -63,6 +71,7 @@ def build_sim_fleet(
     seed: int = 0,
     prefill_chunk_tokens: Optional[int] = None,
     hybrid_reprefill: str = "off",
+    topology: Optional[DisaggTopology] = None,
 ) -> TenantFleet:
     """Build `n_tenants` engines of one system sharing executor + cache.
 
@@ -72,6 +81,8 @@ def build_sim_fleet(
     """
     cfg = get_config(model_name)
     executor = ChannelSim(device_model or DeviceModel())
+    if topology is not None:
+        topology.attach_sim(executor)
     cls = ENGINE_CLASSES[system]
     # one planner per fleet: the compute channel is shared, so the anti-herd
     # reservation must see every tenant's recompute commitments
@@ -109,4 +120,4 @@ def build_sim_fleet(
         engines[tenant] = eng
         workloads[tenant] = wl
     return TenantFleet(engines=engines, executor=executor, cache=shared_cache,
-                       workloads=workloads)
+                       workloads=workloads, topology=topology)

@@ -35,6 +35,10 @@ class DeviceModel:
     compute_flops: float = 197e12  # bf16 peak (TPU v5e) — or 312e12 for A800
     compute_efficiency: float = 0.45  # sustained fraction for attention-ish work
     hbm_bandwidth: float = 819e9  # B/s
+    # prefill->decode KV-transfer link of a disaggregated fleet (NVLink /
+    # ICI class, markedly faster than the host PCIe path but not free)
+    interconnect_bandwidth: float = 64e9  # B/s one direction
+    interconnect_latency: float = 10e-6
 
     def ssd_read_time(self, nbytes: int, n_requests: int = 1) -> float:
         """Time to read `nbytes` issued as `n_requests` discrete IO requests.
@@ -66,6 +70,10 @@ class DeviceModel:
 
     def pcie_time(self, nbytes: int) -> float:
         return self.pcie_latency + nbytes / self.pcie_bandwidth
+
+    def interconnect_time(self, nbytes: int) -> float:
+        """One KV-handoff transfer over the worker-to-worker link."""
+        return self.interconnect_latency + nbytes / self.interconnect_bandwidth
 
     def compute_time(self, flops: float, hbm_bytes: float = 0.0) -> float:
         t_flops = flops / (self.compute_flops * self.compute_efficiency)
@@ -156,6 +164,18 @@ class ChannelSim(BaseExecutor):
         self.stage_times: Dict[str, float] = {}
         self.events: List[tuple] = []  # (start, end, resource, tag)
 
+    def add_channel(self, name: str):
+        """Register one more FIFO resource (idempotent).
+
+        A disaggregated topology adds per-worker compute channels
+        ("compute:p0", "compute:d1", ...) plus one "interconnect" channel
+        for prefill->decode KV handoffs; the base trio stays untouched so
+        colocated timelines are bit-identical with or without extra
+        channels registered.
+        """
+        self.free_at.setdefault(name, 0.0)
+        self.busy.setdefault(name, 0.0)
+
     def _occupy(self, resource: str, duration: float, tag: str,
                 earliest: float) -> float:
         start = max(self.free_at[resource], earliest)
@@ -168,6 +188,8 @@ class ChannelSim(BaseExecutor):
     def io_duration(self, nbytes: int, n_requests: int, channel: str) -> float:
         if channel == "ssd":
             return self.model.ssd_read_time(nbytes, n_requests)
+        if channel == "interconnect":
+            return self.model.interconnect_time(nbytes)
         return self.model.pcie_time(nbytes)
 
     def submit_io_at(self, fn, *, nbytes, n_requests, channel, at: float,
@@ -189,14 +211,19 @@ class ChannelSim(BaseExecutor):
         return h
 
     def compute_at(self, fn, *, flops=0.0, hbm_bytes=0.0, tag="",
-                   at: float = 0.0):
-        """Occupy the accelerator from `at`; returns (result, end_time)."""
+                   at: float = 0.0, channel: str = "compute"):
+        """Occupy one accelerator channel from `at`; returns (result, end).
+
+        `channel` selects which accelerator — the shared "compute" channel
+        by default, a per-worker channel under a disaggregated topology.
+        """
         dur = self.model.compute_time(flops, hbm_bytes)
-        end = self._occupy("compute", dur, f"compute:{tag}", at)
+        end = self._occupy(channel, dur, f"compute:{tag}", at)
         self.stage_times[tag] = self.stage_times.get(tag, 0.0) + dur
         return (fn() if fn is not None else None), end
 
-    def compute_batch_at(self, items, *, tag="decode", at: float = 0.0):
+    def compute_batch_at(self, items, *, tag="decode", at: float = 0.0,
+                         channel: str = "compute"):
         """One batched accelerator occupation for several requests' ops.
 
         `items` is a list of (fn, flops, hbm_bytes, weight_bytes) — vLLM-style
@@ -211,7 +238,7 @@ class ChannelSim(BaseExecutor):
         hbm = weight + sum(it[2] - it[3] for it in items)
         dur = self.model.compute_time(flops, hbm)
         label = f"compute:{tag}" + (f"[x{len(items)}]" if len(items) > 1 else "")
-        end = self._occupy("compute", dur, label, at)
+        end = self._occupy(channel, dur, label, at)
         self.stage_times[tag] = self.stage_times.get(tag, 0.0) + dur
         return [(it[0]() if it[0] is not None else None) for it in items], end
 

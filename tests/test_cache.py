@@ -99,3 +99,54 @@ class TestBaselinePolicies:
         c.insert((0, 0))
         assert c.lookup((0, 0)) == DEVICE
         assert c.misses == 1 and c.hits[DEVICE] == 1
+
+
+class TestContainsIsPureQuery:
+    """`contains` is the scheduler's placement probe (handoff payload sizing,
+    cache-aware admission): it must answer without perturbing policy state —
+    neither recency/frequency used for eviction nor any hit/miss counter."""
+
+    @pytest.mark.parametrize("cls", [AttentionGuidedCache, LRUCache,
+                                     LFUCache, ImpressScoreCache])
+    def test_contains_never_touches_counters(self, cls):
+        c = cls(2, 2)
+        c.insert((7, 0))
+        c.insert((7, 1), tier=HOST)
+        before = (dict(c.hits), c.misses,
+                  {t: dict(s) for t, s in c.tenant_stats.items()})
+        assert c.contains((7, 0)) == DEVICE
+        assert c.contains((7, 1)) == HOST
+        assert c.contains((7, 99)) is None  # miss probe counts nothing
+        after = (dict(c.hits), c.misses,
+                 {t: dict(s) for t, s in c.tenant_stats.items()})
+        assert after == before
+
+    def test_contains_never_refreshes_lru_recency(self):
+        c = LRUCache(2, 0)
+        c.insert((0, 0))
+        c.insert((0, 1))
+        # probing the oldest entry must NOT refresh it ...
+        for _ in range(3):
+            assert c.contains((0, 0)) == DEVICE
+        c.insert((0, 2))
+        assert (0, 0) not in c.tiers[DEVICE]  # still the LRU victim
+        assert (0, 1) in c.tiers[DEVICE]
+        # ... whereas a lookup does (the control arm of the same scenario)
+        d = LRUCache(2, 0)
+        d.insert((0, 0))
+        d.insert((0, 1))
+        d.lookup((0, 0))
+        d.insert((0, 2))
+        assert (0, 0) in d.tiers[DEVICE]
+
+    def test_contains_never_bumps_lfu_frequency(self):
+        c = LFUCache(4, 0)
+        c.insert((0, 0))
+        c.insert((0, 1))
+        c.lookup((0, 1))  # F: (0,0)=1, (0,1)=2
+        for _ in range(5):
+            c.contains((0, 0))  # must not inflate (0,0)'s frequency
+        assert c.priority((0, 0)) == 1
+        assert c.priority((0, 1)) == 2
+        c.lookup((0, 0))  # the control arm: a lookup does bump it
+        assert c.priority((0, 0)) == 2

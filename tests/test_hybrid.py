@@ -340,3 +340,62 @@ def test_real_chunk_batch_former_preserves_logits(real_stack):
         np.testing.assert_allclose(np.asarray(cb.result),
                                    np.asarray(cu.result),
                                    rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------- per-run planner scoping
+def test_reset_clears_anti_herd_reservations():
+    """decide() plants a compute-channel reservation when it picks a
+    recompute leg; reset() must clear every channel's reservation (fresh
+    run = fresh queue model) while keeping the real-mode IO EWMA."""
+    cfg = get_config(KV_HEAVY)
+    store = _store(cfg)
+    ex = __import__("repro.storage.timing", fromlist=["ChannelSim"]).ChannelSim(
+        _derated(PAPER, 64))
+    hp = HybridPlanner("force-compute", device_model=ex.model)
+    hp.io_scale = 3.0  # pretend real-mode feedback arrived
+    d = hp.decide(cfg=cfg, store=store, missing_units=list(range(8)),
+                  prefix_len=PREFIX, executor=ex)
+    assert d.recompute_units and hp._reserved_until.get("compute", 0.0) > 0.0
+    hp.reset()
+    assert hp._reserved_until == {}
+    assert hp.io_scale == 3.0  # EWMA survives: it models the device, not a run
+
+
+def test_shared_planner_back_to_back_sweeps_identical():
+    """Fleet-shared planner reused across two sim sweeps: without per-run
+    scoping the first sweep's anti-herd reservations leak into the second
+    and skew its pricing.  Scheduler.run() now reset()s each planner, so
+    run 2 must reproduce run 1 decision-for-decision and tick-for-tick."""
+    model = _derated(PAPER, 16)
+    planner = HybridPlanner("auto", device_model=model)
+
+    def sweep():
+        fleet = build_sim_fleet("contiguous_kv", KV_HEAVY, n_tenants=1,
+                                prefix_len=PREFIX, seed=0,
+                                device_model=model, device_cap=24,
+                                host_cap=48, hybrid_reprefill="off")
+        for eng in fleet.engines.values():
+            eng.hybrid = planner  # one planner object across BOTH sweeps
+        sched = Scheduler(fleet.engines, max_concurrency=4)
+        rng = np.random.default_rng(7)
+        t, reqs = 0.0, []
+        for i in range(12):
+            t += rng.exponential(0.05)
+            reqs.append(Request(request_id=i, suffix=np.arange(64) % 100,
+                                arrival=t, tenant=1))
+        return sched.run(reqs)
+
+    first = sweep()
+    assert sum(c.trace.recompute_units for c in first) > 0, (
+        "scenario too mild: the planner never fired, reservations unused")
+    assert planner._reserved_until, "sweep left no reservation to leak"
+    second = sweep()
+    for a, b in zip(first, second):
+        assert b.trace.ttft == a.trace.ttft
+        assert b.trace.stages == a.trace.stages
+        assert b.trace.recompute_units == a.trace.recompute_units
+        da, db = a.trace.hybrid_decision, b.trace.hybrid_decision
+        assert (da is None) == (db is None)
+        if da is not None:
+            assert db.recompute_units == da.recompute_units
+            assert db.t_hybrid == da.t_hybrid

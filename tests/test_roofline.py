@@ -12,8 +12,9 @@ def _mesh22():
     n = len(jax.devices())
     if n < 4:
         pytest.skip("needs >=4 devices (xla_force_host_platform_device_count)")
-    return jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+
+    return make_host_mesh(2, 2)
 
 
 def test_scan_trip_count_scales_flops():
