@@ -52,8 +52,16 @@ DISAGG_TESTS := tests/test_disagg.py
 KERNEL_TESTS := tests/test_kernels.py tests/test_tail_pool.py \
 	tests/test_device_pool.py
 
+# multi-device serving: data-parallel replicas behind one Scheduler, the
+# tensor-parallel paged decode attend (8-virtual-device parity vs the
+# single-device oracle), the serving mesh factory, and the sharded sparse
+# decode sweep — runs under forced host devices via verify-sharded (its own
+# CI job; ignored by verify-core-tests)
+SHARDED_TESTS := tests/test_sharded_sparse.py tests/test_sharding_small.py \
+	tests/test_sharded_decode.py tests/test_replicas.py
+
 .PHONY: verify verify-core verify-core-tests verify-kernels verify-serving \
-	verify-serving-tests verify-hybrid verify-disagg test \
+	verify-serving-tests verify-hybrid verify-disagg verify-sharded test \
 	bench-throughput bench-baseline bench-trend
 
 verify: test bench-throughput
@@ -66,12 +74,11 @@ verify-core: verify-core-tests verify-kernels verify-serving
 # full-tree discovery minus the suites owned by the other jobs
 verify-core-tests:
 	$(PY) -m pytest -q --durations=15 \
-		--deselect tests/test_sharded_sparse.py \
-		--deselect tests/test_sharding_small.py \
 		$(addprefix --ignore=,$(SERVING_TESTS)) \
 		$(addprefix --ignore=,$(KERNEL_TESTS)) \
 		$(addprefix --ignore=,$(HYBRID_TESTS)) \
-		$(addprefix --ignore=,$(DISAGG_TESTS))
+		$(addprefix --ignore=,$(DISAGG_TESTS)) \
+		$(addprefix --ignore=,$(SHARDED_TESTS))
 
 # fast inner loop for kernel / TailPool / DeviceTailPool work
 verify-kernels:
@@ -85,6 +92,12 @@ verify-hybrid:
 
 verify-disagg:
 	$(PY) -m pytest -q --durations=15 $(DISAGG_TESTS)
+
+# multi-device lane: 8 forced host devices so the TP parity test, the
+# replica suite and the sharded sparse sweep all see a real mesh
+verify-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m pytest -q --durations=15 $(SHARDED_TESTS)
 
 verify-serving: verify-serving-tests verify-hybrid verify-disagg
 	$(PY) benchmarks/bench_throughput.py --quick

@@ -32,6 +32,13 @@ and handoff KV volume per split.  Gated: the best split must beat the
 colocated P95 TTFT (``best_split_p95_speedup > 1``, also pinned by
 bench-trend).
 
+A replica section weak-scales one decode-heavy Poisson stream across
+data-parallel engine replicas (1, 2, 4) behind one Scheduler — request
+count, offered rate and admission slots all scale with the replica count —
+and reports per-count decode token rate plus the 4-replica
+``scaling_ratio``.  Gated: 4 replicas must reach >= 2x the single-replica
+decode rate (also pinned by bench-trend).
+
 A real-mode section serves a tiny real model (wall clock, interpret-mode
 Pallas kernels) at concurrency 4 with and without the real driver's
 batched paged decode attention and reports decode_tok_rate b=1 vs b<=4
@@ -76,6 +83,7 @@ from benchmarks.common import (  # noqa: E402
 )
 from repro.serving import (
     DisaggTopology,
+    ReplicaSet,
     Request,
     Scheduler,
     poisson_arrivals,
@@ -274,6 +282,7 @@ def run(quick: bool = False):
 
     rows += _hybrid_sweep_rows()
     rows += _disagg_sweep_rows()
+    rows += _replica_sweep_rows()
     rows += _real_decode_rows(quick)
     return rows
 
@@ -335,6 +344,60 @@ def _disagg_sweep_rows():
     assert best_p95 < colo["p95_ttft"], (
         f"no P:D split beat colocated P95 TTFT: best {best_spec} "
         f"{best_p95:.4f}s vs colocated {colo['p95_ttft']:.4f}s")
+    return rows
+
+
+def _replica_sweep_rows():
+    """Weak-scaling sweep: data-parallel replicas behind one Scheduler (sim).
+
+    Serves a decode-heavy Poisson stream (32 decode tokens) at fixed
+    per-replica pressure — request count, offered rate and admission slots
+    all scale with the replica count — so perfect scaling would multiply
+    the aggregate decode token rate by the replica count.  The shared
+    ssd/pcie channels and the single admission queue keep it below that;
+    the gate pins the achieved ratio at 4 replicas >= 2x the single-replica
+    rate (``scaling_ratio``, additionally pinned by the bench-trend job).
+    The sim is deterministic, so the ratio is exact run-to-run."""
+    model_name, prefix_len = "qwen3-1.7b", 512
+    base_req, base_rate, decode_tokens, base_conc = 6, 200.0, 32, 4
+
+    def serve(n_replicas):
+        reps = ReplicaSet(n_replicas=n_replicas) if n_replicas > 1 else None
+        fleet = build_sim_fleet("contiguous_kv", model_name, n_tenants=2,
+                                prefix_len=prefix_len, seed=0, replicas=reps)
+        arrivals = poisson_arrivals(base_rate * n_replicas,
+                                    base_req * n_replicas, seed=0)
+        reqs = [Request(request_id=i, suffix=np.arange(4) + i,
+                        tenant=1 + i % 2, arrival=float(arrivals[i]),
+                        decode_tokens=decode_tokens)
+                for i in range(base_req * n_replicas)]
+        sched = Scheduler(fleet.engines, replicas=reps,
+                          max_concurrency=base_conc * n_replicas)
+        s = summarize(sched.run(reqs))
+        if reps is not None:
+            assert all(n > 0 for n in sched.replica_admits), (
+                f"r{n_replicas}: idle replica (admits={sched.replica_admits})")
+        return s
+
+    rows = []
+    rates = {}
+    for n in (1, 2, 4):
+        s = serve(n)
+        rates[n] = s["decode_tok_rate"]
+        tag = f"serving/replicas/r{n}"
+        rows += [
+            (f"{tag}/decode_tok_rate", s["decode_tok_rate"], "tok/s"),
+            (f"{tag}/p95_ttft_ms", s["p95_ttft"] * 1e3, "ms"),
+            (f"{tag}/goodput_rps", s["goodput_rps"], "req/s"),
+        ]
+    ratio = rates[4] / rates[1]
+    rows.append(("serving/replicas/scaling_ratio", ratio, "x"))
+    # acceptance gate (enforced standalone + harness, pinned by check_trend):
+    # 4 replicas must at least double the single-replica decode rate under
+    # 4x offered load
+    assert ratio >= 2.0, (
+        f"4-replica weak scaling below 2x: {rates[4]:.1f} tok/s vs "
+        f"{rates[1]:.1f} tok/s single-replica")
     return rows
 
 
@@ -684,7 +747,8 @@ def main():
           "cuts p95 TTFT at c4; SLO pressure preempts; hybrid auto beats "
           "force-load at 16x-derated SSD and stays silent at 1x; "
           "a prefill:decode split beats colocated p95 TTFT under the "
-          "decode-heavy Poisson stream; real-mode batched "
+          "decode-heavy Poisson stream; 4 data-parallel replicas at least "
+          "double the single-replica decode token rate; real-mode batched "
           "decode raises decode_tok_rate; device-resident pools beat the "
           "host-resident path on the b=1 step rate and move no pool bytes "
           "over H2D")

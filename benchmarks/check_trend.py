@@ -46,6 +46,9 @@ DEFAULT_PATTERNS = (
     # deterministic sim: the best prefill:decode worker split's P95 TTFT
     # win over colocated serving (the benchmark asserts > 1; this pins it)
     "serving/disagg/best_split_p95_speedup",
+    # deterministic sim: 4-replica weak-scaling throughput ratio (the
+    # benchmark asserts >= 2.0; this pins the achieved value)
+    "serving/replicas/scaling_ratio",
 )
 
 

@@ -366,12 +366,28 @@ def stack_tail_pools(pools):
 
 
 class RealCompute:
-    """Tiny-model execution; batch = 1 request."""
+    """Tiny-model execution; batch = 1 request.
 
-    def __init__(self, cfg: ModelConfig, params):
+    ``tp_mesh`` (optional) turns the decode-batch paged attention into the
+    tensor-parallel shard_map path
+    (:func:`repro.launch.sharded_sparse.make_sharded_paged_decode`): pool
+    pages shard over the mesh's tensor axes with per-shard page tables, and
+    both ``decode_attend`` and ``decode_step_batch`` route through it.  The
+    sharded attend is a drop-in (same signature, same per-page mass
+    contract) validated bit-close to the single-device kernel."""
+
+    def __init__(self, cfg: ModelConfig, params, *, tp_mesh=None):
         assert cfg.has_attention, "Re-Prefill engine needs attention KV"
         self.cfg = cfg
         self.params = params
+        self.tp_mesh = tp_mesh
+        if tp_mesh is not None:
+            # lazy import: core must stay importable without launch/
+            from repro.launch.sharded_sparse import make_sharded_paged_decode
+
+            self._tp_attend = make_sharded_paged_decode(tp_mesh)
+        else:
+            self._tp_attend = None
 
     def embed(self, suffix_tokens: np.ndarray):
         return _embed(self.params, jnp.asarray(suffix_tokens)[None], self.cfg)
@@ -469,7 +485,15 @@ class RealCompute:
         cfg = self.cfg
         lp = _slice_layer(self.params, layer)
         q1 = q[:, 0]  # (1, n_q, d) — single decode position
-        if tail.is_device:
+        if self._tp_attend is not None:
+            if tail.is_device:
+                k_pool, v_pool = stack_pool_buffers((tail.k,), (tail.v,))
+                out, page_mass = self._tp_attend(
+                    q1, k_pool, v_pool, tail.device_table(),
+                    jnp.asarray(np.array([tail.valid_tokens], np.int32)))
+            else:
+                out, page_mass = self._tp_attend(q1, *tail.attend_args())
+        elif tail.is_device:
             # raw device buffers straight into the jitted step: the b=1
             # expand happens inside the trace, so the whole attend is one
             # dispatch with zero pool bytes moved (lengths goes through
@@ -541,7 +565,9 @@ class RealCompute:
                 k_pool, v_pool, table, lengths = stack_tail_pools(
                     [c.pools[l] for c in ctxs])
                 k_pool, v_pool = jnp.asarray(k_pool), jnp.asarray(v_pool)
-            out, page_mass = decode_attention(
+            attend = (self._tp_attend if self._tp_attend is not None
+                      else decode_attention)
+            out, page_mass = attend(
                 q[:, 0], k_pool, v_pool, jnp.asarray(table),
                 jnp.asarray(lengths))
             attn = out.reshape(b, 1, cfg.n_heads, cfg.d_head)

@@ -56,6 +56,29 @@ def kv_axes(mesh) -> tuple:
     return ("kv",) if "kv" in mesh.axis_names else ("model",)
 
 
+def make_serving_mesh(*, kv_split: int = 0):
+    """Tensor-parallel mesh for the serving tier's decode backend.
+
+    A full pod (>= 256 devices) gets the production mesh; anything smaller
+    (dev boxes, the forced-host-device CI lane) turns every local device
+    into tensor parallelism — ``kv_split=k`` factors them into (kv=k,
+    rep=n/k) like the GQA production mesh, else one flat "model" axis.
+    ``tp_axes`` resolves correctly on every variant, so
+    :func:`repro.launch.sharded_sparse.make_sharded_paged_decode` is
+    mesh-shape agnostic."""
+    n = len(jax.devices())
+    if n >= 256:
+        return make_production_mesh(kv_split=kv_split)
+    if kv_split:
+        if kv_split < 1 or n % kv_split:
+            raise ValueError(
+                f"kv_split={kv_split} must be positive and divide the "
+                f"local device count {n}")
+        return jax.make_mesh((kv_split, n // kv_split), ("kv", "rep"),
+                             **_axis_type_kwargs(2))
+    return jax.make_mesh((n,), ("model",), **_axis_type_kwargs(1))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / smoke runs)."""
     n = len(jax.devices())

@@ -39,6 +39,16 @@ bit-identical) and hands each plan's device tail pools across at the
 prefill/decode boundary via the PR-5 swap_out/swap_in contract.  The digest
 adds handoff counts/bytes and (sim, with ``--hybrid-reprefill``) how many
 handoffs the planner priced as decode-side recompute instead of a KV pull.
+
+``--replicas N`` scales the serving tier to N data-parallel replicas behind
+the one Scheduler: sim mode gives each replica its own compute channel
+("compute:r{i}") and real mode builds one backend instance per replica
+(decode phases move there via the tail-pool handoff).  Composes with
+``--disaggregate P:D``: each replica then owns its own P prefill + D decode
+worker channels.  ``--tp-decode K`` (real mode) runs the decode-batch paged
+attention tensor-parallel over the local devices via shard_map
+(``make_sharded_paged_decode``); K > 0 factors the mesh GQA-style into
+(kv=K, rep=n/K), K = 0 uses one flat "model" axis over all devices.
 """
 from __future__ import annotations
 
@@ -49,6 +59,7 @@ import numpy as np
 from repro.serving import (
     POLICIES,
     DisaggTopology,
+    ReplicaSet,
     Request,
     Scheduler,
     make_arrivals,
@@ -57,10 +68,21 @@ from repro.serving import (
 from repro.serving.tenancy import ENGINE_CLASSES, build_sim_fleet
 
 
-def _print_handoff_digest(sched):
-    if sched.topology is None:
+def _print_replica_digest(sched):
+    if sched.replicas is None:
         return
-    topo = sched.topology
+    reps = sched.replicas
+    admits = "/".join(str(n) for n in sched.replica_admits)
+    suffix = (f" x {reps.topology.n_prefill}P:{reps.topology.n_decode}D each"
+              if reps.topology is not None else "")
+    print(f"replicas={reps.n_replicas}{suffix}: admissions {admits}")
+
+
+def _print_handoff_digest(sched):
+    topo = (sched.replicas.topology if sched.replicas is not None
+            else sched.topology)
+    if topo is None:
+        return
     print(f"disaggregated {topo.n_prefill}P:{topo.n_decode}D: "
           f"handoffs={sched.handoffs} "
           f"kv_bytes={sched.handoff_bytes/1e6:.2f}MB", end="")
@@ -103,13 +125,36 @@ def _real_main(args):
         kw.update(budget=args.budget, period=args.period, subperiod=args.subperiod)
     elif args.system != "as_lru":
         kw.update(budget=args.budget)
-    eng = ENGINE_CLASSES[args.system](sess, RealCompute(cfg, params), ex, **kw)
+    tp_mesh = None
+    if args.tp_decode is not None:
+        from repro.launch.mesh import make_serving_mesh
+
+        tp_mesh = make_serving_mesh(kv_split=args.tp_decode)
+        print(f"tensor-parallel decode: {len(jax.devices())} devices, "
+              f"mesh {dict(tp_mesh.shape)}")
+    eng = ENGINE_CLASSES[args.system](
+        sess, RealCompute(cfg, params, tp_mesh=tp_mesh), ex, **kw)
 
     topology = None
     if args.disaggregate:
         topology = DisaggTopology.parse(args.disaggregate)
+    replicas = None
+    if args.replicas:
+        n = ReplicaSet.parse(args.replicas).n_replicas
+        workers = topology.n_decode if topology is not None else 1
+        # every worker backend shares the colocated params: bit-identical
+        # logits regardless of which replica serves the decode phase
+        replicas = ReplicaSet(
+            topology=topology,
+            backends=[[RealCompute(cfg, params, tp_mesh=tp_mesh)
+                       for _ in range(workers)] for _ in range(n)])
+        split = (f" x {topology.n_prefill}P:{topology.n_decode}D each"
+                 if topology is not None else "")
+        print(f"replicating: {n} data-parallel replicas{split} "
+              f"(pool handoff at decode)")
+    elif topology is not None:
         # decode workers share the colocated params: bit-identical logits
-        topology.decode_backends = [RealCompute(cfg, params)
+        topology.decode_backends = [RealCompute(cfg, params, tp_mesh=tp_mesh)
                                     for _ in range(topology.n_decode)]
         print(f"disaggregating: {topology.n_prefill} prefill / "
               f"{topology.n_decode} decode workers (pool handoff)")
@@ -124,7 +169,7 @@ def _real_main(args):
                       preempt=args.preempt,
                       swap_on_preempt=args.swap_on_preempt,
                       prefill_estimate=args.prefill_estimate,
-                      topology=topology)
+                      topology=topology, replicas=replicas)
     completed = sched.run(requests)
 
     correct = 0
@@ -160,6 +205,7 @@ def _real_main(args):
         pools = "host" if args.host_tail_pool else "device"
         print(f"preemptions={s['preemptions']} swaps={s['swaps']} "
               f"swap_bytes={sched.swap_bytes/1e6:.2f}MB ({pools} tail pools)")
+    _print_replica_digest(sched)
     _print_handoff_digest(sched)
     if args.decode_tokens == 0:
         # with decode, c.result is the *last* token's logits, not the label
@@ -170,13 +216,14 @@ def _real_main(args):
 def _sim_main(args):
     topology = (DisaggTopology.parse(args.disaggregate)
                 if args.disaggregate else None)
+    replicas = ReplicaSet.parse(args.replicas) if args.replicas else None
     fleet = build_sim_fleet(args.system, args.model, n_tenants=args.tenants,
                             prefix_len=args.prefix_len, budget=args.budget,
                             period=args.period, subperiod=args.subperiod,
                             device_cap=args.device_cap, host_cap=args.host_cap,
                             prefill_chunk_tokens=args.prefill_chunk_tokens,
                             hybrid_reprefill=args.hybrid_reprefill,
-                            topology=topology)
+                            topology=topology, replicas=replicas)
     arrivals = make_arrivals(args.arrival, args.rate, args.requests, seed=0)
     rng = np.random.default_rng(0)
     requests = [
@@ -194,7 +241,7 @@ def _sim_main(args):
                       preempt=args.preempt,
                       swap_on_preempt=args.swap_on_preempt,
                       prefill_estimate=args.prefill_estimate,
-                      topology=topology)
+                      topology=topology, replicas=replicas)
     completed = sched.run(requests)
     for c in completed:
         tr = c.trace
@@ -225,6 +272,7 @@ def _sim_main(args):
         avoided = sum(c.trace.ssd_bytes_avoided for c in completed)
         print(f"hybrid re-prefill: {rec_units} units recomputed, "
               f"{avoided/1e6:.2f}MB SSD reads avoided")
+    _print_replica_digest(sched)
     _print_handoff_digest(sched)
     usage = fleet.cache.tenant_usage()
     for tenant in sorted(usage):
@@ -277,6 +325,16 @@ def main():
                         "with a KV-handoff channel (sim: per-worker FIFO "
                         "channels + interconnect; real: extra decode "
                         "backends + tail-pool handoff)")
+    p.add_argument("--replicas", default=None, metavar="N",
+                   help="data-parallel serving replicas behind one "
+                        "Scheduler (sim: per-replica compute channels; "
+                        "real: one backend per replica); composes with "
+                        "--disaggregate into per-replica worker splits")
+    p.add_argument("--tp-decode", type=int, default=None, metavar="K",
+                   help="real mode: tensor-parallel paged decode attention "
+                        "over the local devices via shard_map; K>0 factors "
+                        "the mesh GQA-style into (kv=K, rep=n/K), K=0 uses "
+                        "one flat tensor axis")
     # real mode
     p.add_argument("--arch", default="qwen2.5-14b")
     p.add_argument("--dataset", default="rte")

@@ -135,9 +135,22 @@ def make_sharded_sparse_decode_step(cfg: ModelConfig, mesh, *,
         b = h.shape[0]
         length = state["length"]
         S = state["k"].shape[2]
+        # the KV capacity is first known here (trace time of the built
+        # step): every shard must hold a whole number of chunks, or the
+        # local chunk reshape / top_k collapse with opaque shape errors
+        # (S_local < chunk_tokens gives m_local = 0 and k_sel = 1 > 0)
+        if S % (n_shards * chunk_tokens):
+            raise ValueError(
+                f"sharded sparse decode needs the KV capacity S={S} "
+                f"divisible by n_shards*chunk_tokens = {n_shards}*"
+                f"{chunk_tokens} = {n_shards * chunk_tokens} so each shard "
+                f"holds whole ContiguousChunks; pad the KV state to a "
+                f"multiple or lower chunk_tokens/shard count")
         S_local = S // n_shards
         m_local = S_local // chunk_tokens
-        k_sel = max(1, int(budget * m_local))
+        # clamp: a budget >= 1.0 must select every local chunk, never
+        # top_k(k > m_local)
+        k_sel = min(max(1, int(budget * m_local)), m_local)
         positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(jnp.int32)
 
         inner = functools.partial(
@@ -173,3 +186,102 @@ def make_sharded_sparse_decode_step(cfg: ModelConfig, mesh, *,
         return logits, new_state
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel paged decode attention (the serving-tier TP backend)
+# ---------------------------------------------------------------------------
+def _local_paged_attention(q, k_shard, v_shard, page_table, lengths, *,
+                           axes: Tuple[str, ...]):
+    """Per-shard body of the sharded paged decode attend.
+
+    The pools' *page* dim is sharded: this shard owns physical pages
+    ``[base, base + local)``.  Each page-table slot belongs to exactly one
+    shard (physical indices partition cleanly), so the shard computes
+    logits for the slots it owns, masks the rest, and the shards merge
+    softmax partials with the flash-decode combine — slot positions stay
+    *logical* (slot * page + offset), so the causal ``pos < lengths`` mask
+    is identical to the single-device oracle's.
+
+    q: (b, n_q, d) replicated; k/v_shard: (b, local, page, n_kv, d);
+    page_table: (b, n_active) int32, < 0 = pad, replicated; lengths: (b,).
+    Returns (out (b, n_q, d), mass (b, n_q, n_active) fp32), replicated.
+    """
+    b, n_q, d = q.shape
+    _, local, page, n_kv, _ = k_shard.shape
+    n_active = page_table.shape[1]
+    group = n_q // n_kv
+    scale = d ** -0.5
+
+    base = jax.lax.axis_index(axes) * local
+    owned = (page_table >= base) & (page_table < base + local)  # excl. pads
+    tbl = jnp.where(owned, page_table - base, 0)
+    k = jnp.take_along_axis(k_shard, tbl[:, :, None, None, None], axis=1)
+    v = jnp.take_along_axis(v_shard, tbl[:, :, None, None, None], axis=1)
+    k = k.reshape(b, n_active * page, n_kv, d)
+    v = v.reshape(b, n_active * page, n_kv, d)
+
+    qg = q.reshape(b, n_kv, group, d).astype(jnp.float32)
+    logits = jnp.einsum("bngd,btnd->bngt", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(n_active * page)
+    mask = pos[None, :] < lengths[:, None]
+    mask = mask & jnp.repeat(owned, page, axis=1)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+
+    # flash-decode combine: normalize against the global max so partials
+    # from different shards add exactly; masked positions are zeroed
+    # explicitly (NEG_INF underflows to 0 anyway, but an all-masked row
+    # must not resurrect as exp(0) = 1)
+    m_loc = logits.max(axis=-1, keepdims=True)  # (b, n_kv, g, 1)
+    m_glob = jax.lax.pmax(m_loc, axes)
+    p = jnp.exp(logits - m_glob)
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    l_glob = jax.lax.psum(p.sum(axis=-1, keepdims=True), axes)
+    l_glob = jnp.maximum(l_glob, 1e-30)
+    o = jax.lax.psum(
+        jnp.einsum("bngt,btnd->bngd", p, v.astype(jnp.float32)), axes)
+    out = (o / l_glob).astype(v_shard.dtype)
+    mass = jax.lax.psum(
+        p.reshape(b, n_kv, group, n_active, page).sum(-1), axes) / l_glob
+    return out.reshape(b, n_q, d), mass.reshape(b, n_q, n_active)
+
+
+def make_sharded_paged_decode(mesh):
+    """Tensor-parallel drop-in for :func:`...ops.decode_attention`.
+
+    Returns a jitted ``attend(q, k_pool, v_pool, page_table, lengths) ->
+    (out, mass)`` that shards the pools' page dim over the mesh's tensor
+    axes (``tp_axes``) and runs :func:`_local_paged_attention` under
+    shard_map.  Same signature, same (b, n_q, n_active) mass contract, and
+    outputs match the single-device path to fp32 combine precision — each
+    page-table slot is owned by exactly one shard, so per-page mass needs
+    no dedup.  The page dim is zero-padded to a multiple of the shard
+    count inside the jitted wrapper; pad pages are unreachable (no table
+    entry points past the real pool), so padding never changes results.
+    """
+    from repro.launch.mesh import tp_axes  # local import: no cycle at load
+
+    axes = tp_axes(mesh)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+
+    @jax.jit
+    def attend(q, k_pool, v_pool, page_table, lengths):
+        pad = (-k_pool.shape[1]) % n_shards
+        if pad:
+            widths = ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0))
+            k_pool = jnp.pad(k_pool, widths)
+            v_pool = jnp.pad(v_pool, widths)
+        pool_spec = P(None, axes, None, None, None)
+        sharded = _shard_map(
+            functools.partial(_local_paged_attention, axes=axes),
+            mesh=mesh,
+            in_specs=(P(), pool_spec, pool_spec, P(), P()),
+            out_specs=(P(), P()),
+        )
+        return sharded(q, k_pool, v_pool,
+                       page_table.astype(jnp.int32),
+                       lengths.astype(jnp.int32))
+
+    return attend

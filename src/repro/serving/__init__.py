@@ -7,7 +7,8 @@ repro.storage.timing (ChannelSim shared-FIFO discrete-event core):
   scheduler — Scheduler + admission policies (FCFS, cache-aware affinity),
               Request/CompletedRequest, run summaries;
   tenancy   — multi-tenant fleets: N prefixes, one shared cache/executor;
-  disagg    — prefill/decode worker topology + KV-handoff channel.
+  disagg    — prefill/decode worker topology + KV-handoff channel;
+  replicas  — data-parallel engine replicas behind one Scheduler.
 """
 from repro.serving.arrivals import (
     burst_arrivals,
@@ -16,6 +17,7 @@ from repro.serving.arrivals import (
     uniform_arrivals,
 )
 from repro.serving.disagg import INTERCONNECT, DisaggTopology
+from repro.serving.replicas import ReplicaSet, replica_channel
 from repro.serving.scheduler import (
     POLICIES,
     CacheAffinityPolicy,
@@ -35,6 +37,8 @@ __all__ = [
     "uniform_arrivals",
     "INTERCONNECT",
     "DisaggTopology",
+    "ReplicaSet",
+    "replica_channel",
     "POLICIES",
     "CacheAffinityPolicy",
     "CompletedRequest",

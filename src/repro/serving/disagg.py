@@ -63,8 +63,13 @@ class DisaggTopology:
     def __post_init__(self):
         if self.decode_backends is not None:
             self.n_decode = len(self.decode_backends)
-        assert self.n_prefill >= 1 and self.n_decode >= 1, (
-            self.n_prefill, self.n_decode)
+        # explicit ValueError, not assert: under `python -O` an assert
+        # vanishes and a zero-worker topology would die much later in a
+        # min() over empty channel lists deep inside the scheduler
+        if self.n_prefill < 1 or self.n_decode < 1:
+            raise ValueError(
+                f"DisaggTopology needs at least one prefill and one decode "
+                f"worker, got {self.n_prefill}:{self.n_decode}")
 
     @classmethod
     def parse(cls, spec: str) -> "DisaggTopology":
@@ -72,7 +77,7 @@ class DisaggTopology:
         try:
             p, d = spec.split(":")
             return cls(n_prefill=int(p), n_decode=int(d))
-        except (ValueError, AssertionError):
+        except ValueError:
             raise ValueError(
                 f"--disaggregate expects P:D with positive integers, "
                 f"got {spec!r}") from None

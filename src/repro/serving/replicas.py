@@ -1,0 +1,120 @@
+"""Data-parallel engine replicas behind one Scheduler.
+
+A :class:`ReplicaSet` scales the serving tier horizontally: N replica
+accelerators (or N disaggregated worker groups) serve one admission queue.
+The Scheduler stays the single control point — arXiv:2511.16138's "scale
+the serving tier before the cache tier" — while each replica owns its own
+compute resources, so decode iterations on different replicas genuinely
+overlap instead of queueing on one accelerator.
+
+Sim mode: each replica is one more FIFO compute channel ("compute:r0",
+"compute:r1", ...) registered on the shared :class:`ChannelSim` via the
+same ``add_channel`` contract the disaggregated topology uses; ssd/pcie
+stay global (storage is a shared medium either way).  Admission routes
+every plan to the least-backlogged replica — exactly how
+:class:`DisaggTopology` routes prefill workers — and the batch formers
+scope per replica automatically, because a sim iteration only coalesces
+plans pinned to the same ``RequestClock.channel``.
+
+Composition with prefill/decode disaggregation: a ReplicaSet may carry a
+per-replica :class:`DisaggTopology`, in which case replica ``r`` owns its
+own worker channels ("compute:r{r}:p{j}", "compute:r{r}:d{j}") and
+prefill->decode handoffs stay within the replica; the interconnect FIFO
+remains fleet-global (one KV-transfer link, as in the PR-7 model).
+
+Real mode: ``backends`` carries one worker-backend list per replica (a
+single :class:`repro.core.backends.RealCompute` without disaggregation, D
+of them with).  Plans are assigned a replica at admission
+(least-backlogged) and the decode phase moves to the replica's backend at
+the first decode op via the PR-7 pool ``swap_out``/``swap_in`` handoff —
+the real batch formers group by backend identity, so per-replica scoping
+falls out of the stamping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.serving.disagg import INTERCONNECT, DisaggTopology
+from repro.storage.timing import ChannelSim
+
+
+def replica_channel(r: int) -> str:
+    """The one compute channel of replica `r` (no disaggregation)."""
+    return f"compute:r{r}"
+
+
+@dataclasses.dataclass
+class ReplicaSet:
+    """N data-parallel serving replicas behind one Scheduler.
+
+    ``n_replicas`` sizes the fleet (sim mode models each replica as its own
+    compute channel).  ``topology`` (optional) gives every replica its own
+    prefill/decode worker split — `--replicas N --disaggregate P:D` composes
+    to N*(P+D) worker channels.  ``backends`` (real mode) maps replica ->
+    its worker-backend list; when set, its length overrides ``n_replicas``.
+    """
+
+    n_replicas: int = 1
+    topology: Optional[DisaggTopology] = None
+    backends: Optional[List[List[object]]] = None
+
+    def __post_init__(self):
+        if self.backends is not None:
+            self.n_replicas = len(self.backends)
+            if any(not bs for bs in self.backends):
+                raise ValueError(
+                    "every replica needs at least one worker backend")
+        # explicit ValueError, not assert (same treatment as DisaggTopology):
+        # `python -O` strips asserts and a zero-replica set would die later
+        # in a min() over an empty channel list inside the scheduler
+        if self.n_replicas < 1:
+            raise ValueError(
+                f"ReplicaSet needs at least one replica, got "
+                f"{self.n_replicas}")
+
+    @classmethod
+    def parse(cls, spec: str) -> "ReplicaSet":
+        """Parse a ``--replicas N`` count spec like "4"."""
+        try:
+            return cls(n_replicas=int(spec))
+        except ValueError:
+            raise ValueError(
+                f"--replicas expects a positive integer replica count, "
+                f"got {spec!r}") from None
+
+    def prefill_channels(self, r: int) -> List[str]:
+        """Replica `r`'s admission channels (its prefill workers under a
+        per-replica topology, else its single compute channel)."""
+        if self.topology is None:
+            return [replica_channel(r)]
+        return [f"{replica_channel(r)}:p{j}"
+                for j in range(self.topology.n_prefill)]
+
+    def decode_channels(self, r: int) -> List[str]:
+        """Replica `r`'s decode-phase channels (== prefill channels when no
+        per-replica topology splits the phases)."""
+        if self.topology is None:
+            return [replica_channel(r)]
+        return [f"{replica_channel(r)}:d{j}"
+                for j in range(self.topology.n_decode)]
+
+    @property
+    def all_channels(self) -> List[str]:
+        names = []
+        for r in range(self.n_replicas):
+            for c in self.prefill_channels(r) + self.decode_channels(r):
+                if c not in names:
+                    names.append(c)
+        return names
+
+    def attach_sim(self, ex: ChannelSim):
+        """Register the per-replica compute channels (plus the interconnect
+        FIFO when a per-replica topology splits phases) on a ChannelSim —
+        idempotent, and the base ssd/pcie/compute trio stays untouched so
+        colocated timelines are bit-identical with a ReplicaSet registered
+        but unused."""
+        for name in self.all_channels:
+            ex.add_channel(name)
+        if self.topology is not None:
+            ex.add_channel(INTERCONNECT)

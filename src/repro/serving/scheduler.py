@@ -73,6 +73,7 @@ from repro.core.stepplan import (
     resolve_handle,
 )
 from repro.serving.disagg import INTERCONNECT, DisaggTopology
+from repro.serving.replicas import ReplicaSet
 from repro.storage.timing import ChannelSim, IOHandle
 
 
@@ -182,7 +183,8 @@ POLICIES = {"fcfs": FCFSPolicy, "cache_aware": CacheAffinityPolicy,
 class _Active:
     __slots__ = ("request", "plan", "op", "resume", "admitted",
                  "preempt_count", "swap_count", "swapped_bytes", "ttft_seen",
-                 "batch_stamp", "held_op", "handed_off", "worker_backend")
+                 "batch_stamp", "held_op", "handed_off", "worker_backend",
+                 "replica")
 
     def __init__(self, request: Request, plan: StepPlan, admitted: float):
         self.request = request
@@ -198,6 +200,7 @@ class _Active:
         self.held_op = None  # op parked behind a kv_handoff WaitOp (disagg)
         self.handed_off = False  # prefill->decode handoff already emitted
         self.worker_backend = None  # real decode worker backend after handoff
+        self.replica = 0  # owning replica index under a ReplicaSet
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +219,8 @@ class Scheduler:
                  max_batch_tokens: Optional[int] = None,
                  preempt: bool = False, swap_on_preempt: bool = False,
                  prefill_estimate: Optional[float] = None,
-                 topology: Optional[DisaggTopology] = None):
+                 topology: Optional[DisaggTopology] = None,
+                 replicas: Optional[ReplicaSet] = None):
         if not isinstance(engines, dict):
             engines = {getattr(engines, "tenant", 0): engines}
         assert engines, "need at least one engine"
@@ -261,8 +265,25 @@ class Scheduler:
         # one backend instance per decode worker and the handoff reuses the
         # PR-5 pool swap_out/swap_in serialization.
         self.topology = topology
-        if topology is not None and isinstance(self.ex, ChannelSim):
-            topology.attach_sim(self.ex)
+        # data-parallel replicas (None = the single colocated deployment).
+        # Composition: `topology` becomes *per-replica* when a ReplicaSet is
+        # present — every replica gets its own P:D worker channels and
+        # handoffs stay within the replica.
+        self.replicas = replicas
+        if replicas is not None and topology is not None:
+            if replicas.topology is None:
+                replicas.topology = topology
+            elif replicas.topology is not topology:
+                raise ValueError(
+                    "pass the per-replica topology either on the ReplicaSet "
+                    "or as topology=, not two different ones")
+        if isinstance(self.ex, ChannelSim):
+            if replicas is not None:
+                replicas.attach_sim(self.ex)
+            elif topology is not None:
+                topology.attach_sim(self.ex)
+        self.replica_admits = ([0] * replicas.n_replicas
+                               if replicas is not None else [])
         self.handoffs = 0
         self.handoff_bytes = 0  # bytes moved over the handoff link
         self.handoff_recomputes = 0  # handoffs the planner turned into
@@ -281,7 +302,10 @@ class Scheduler:
             hp.reset()
         if isinstance(self.ex, ChannelSim):
             return self._run_sim(requests)
-        if (self.topology is not None
+        if self.replicas is not None and self.replicas.backends is None:
+            raise ValueError("real-mode replicas need ReplicaSet.backends "
+                             "(one worker-backend list per replica)")
+        if (self.replicas is None and self.topology is not None
                 and not self.topology.decode_backends):
             raise ValueError("real-mode disaggregation needs "
                              "DisaggTopology.decode_backends")
@@ -486,7 +510,26 @@ class Scheduler:
         eng = self.engines[req.tenant]
         plan = eng.plan(req.suffix, req.request_id, arrival=start,
                         decode_tokens=req.decode_tokens)
-        if self.topology is not None:
+        replica = 0
+        if self.replicas is not None:
+            # least-backlogged admission across the whole fleet: pick the
+            # (replica, prefill channel) pair with the fewest in-flight
+            # plans, breaking ties by which channel frees earliest.  The
+            # in-flight count matters for simultaneous arrivals — a plan
+            # admitted at t spends its first legs on ssd/pcie, so free_at
+            # alone would keep sending cohort-mates to the same replica
+            load = {}
+            for other in active:
+                c = other.plan.clock.channel
+                load[c] = load.get(c, 0) + 1
+            replica, chan = min(
+                ((r, c) for r in range(self.replicas.n_replicas)
+                 for c in self.replicas.prefill_channels(r)),
+                key=lambda rc: (load.get(rc[1], 0),
+                                self.ex.free_at[rc[1]], rc[1]))
+            plan.clock.channel = chan
+            self.replica_admits[replica] += 1
+        elif self.topology is not None:
             # route the prefill phase to the least-backlogged prefill
             # worker; the channel must be pinned before the generator's
             # first resume, which already prices ops against it
@@ -494,6 +537,7 @@ class Scheduler:
                 self.topology.prefill_channels,
                 key=lambda c: (self.ex.free_at[c], c))
         a = _Active(req, plan, start)
+        a.replica = replica
         try:
             a.op = plan.gen.send(None)
         except StopIteration as stop:  # degenerate plan with no ops
@@ -532,15 +576,26 @@ class Scheduler:
         pulling the bytes, an occupation of the decode worker's own compute
         channel.  Either way the plan's clock is re-routed to the chosen
         decode worker, so every decode-phase op runs there.
+
+        Under a ReplicaSet the handoff stays *within* the owning replica
+        (its topology is per-replica: the candidate decode channels are
+        replica ``a.replica``'s own) — replicas without a per-replica
+        topology never hand off, because each replica colocates both
+        phases on its one channel.
         """
-        if (self.topology is None or a.handed_off
+        topo = (self.replicas.topology if self.replicas is not None
+                else self.topology)
+        if (topo is None or a.handed_off
                 or not getattr(a.plan.trace, "ttft", 0.0)):
             return
         a.handed_off = True
         self.handoffs += 1
         eng = self.engines[a.request.tenant]
         clock = a.plan.clock
-        dst = min(self.topology.decode_channels,
+        dst_channels = (self.replicas.decode_channels(a.replica)
+                        if self.replicas is not None
+                        else topo.decode_channels)
+        dst = min(dst_channels,
                   key=lambda c: (self.ex.free_at[c], c))
         nbytes, tokens = self._handoff_payload(a)
         hp = getattr(eng, "hybrid", None)
@@ -736,6 +791,14 @@ class Scheduler:
                         decode_tokens=req.decode_tokens)
         plan.clock.t = ex.now()
         a = _Active(req, plan, plan.clock.t)
+        if self.replicas is not None:
+            # least-backlogged replica by active plan count (real mode has
+            # no sim channels to compare free-times over)
+            load = [0] * self.replicas.n_replicas
+            for b in active:
+                load[b.replica] += 1
+            a.replica = min(range(len(load)), key=lambda r: (load[r], r))
+            self.replica_admits[a.replica] += 1
         try:
             a.op = plan.gen.send(None)
             self._maybe_handoff_real(a)
@@ -757,16 +820,28 @@ class Scheduler:
         batched kernel pass and the standalone ``op.fn`` path run on the
         decode worker's engine, and the batch former groups plans by decode
         worker exactly like the sim driver's per-worker channels.
+
+        Under a ReplicaSet the candidate backends are the owning replica's
+        own worker list, so a plan's decode phase lands on its replica's
+        accelerator and the backend-identity grouping in the batch formers
+        scopes every batch per replica automatically.
         """
-        if (self.topology is None or self.topology.decode_backends is None
-                or not isinstance(a.op, ComputeOp)
+        if self.replicas is not None and self.replicas.backends is not None:
+            # the owning replica's worker list: one backend without a
+            # per-replica topology, D decode workers with one
+            backends = self.replicas.backends[a.replica]
+        elif (self.topology is not None
+                and self.topology.decode_backends is not None):
+            backends = self.topology.decode_backends
+        else:
+            return
+        if (not isinstance(a.op, ComputeOp)
                 or not isinstance(a.op.batch_ctx, DecodeBatchCtx)):
             return
         ctx = a.op.batch_ctx
         if not a.handed_off:
             a.handed_off = True
             self.handoffs += 1
-            backends = self.topology.decode_backends
             a.worker_backend = backends[self._rr_decode % len(backends)]
             self._rr_decode += 1
             # the transfer: snapshot the pools off the prefill worker's

@@ -27,6 +27,7 @@ from repro.core.engine import (
 from repro.core.hybrid import HybridPlanner
 from repro.core.session import SyntheticWorkload, build_sim_session
 from repro.serving.disagg import DisaggTopology
+from repro.serving.replicas import ReplicaSet
 from repro.storage.timing import ChannelSim, DeviceModel
 
 ENGINE_CLASSES = {
@@ -44,7 +45,10 @@ class TenantFleet:
     ``topology`` (optional) is the fleet's prefill/decode worker split; its
     per-worker compute channels + interconnect FIFO are registered on
     ``executor`` at build time, and a Scheduler built over this fleet should
-    receive the same object.
+    receive the same object.  ``replicas`` (optional) is the fleet's
+    data-parallel replica set, handled the same way — when both are given
+    the topology is per-replica (see :class:`repro.serving.replicas
+    .ReplicaSet`).
     """
 
     engines: Dict[int, object]
@@ -52,6 +56,7 @@ class TenantFleet:
     cache: object
     workloads: Dict[int, SyntheticWorkload]
     topology: Optional[DisaggTopology] = None
+    replicas: Optional[ReplicaSet] = None
 
 
 def build_sim_fleet(
@@ -72,6 +77,7 @@ def build_sim_fleet(
     prefill_chunk_tokens: Optional[int] = None,
     hybrid_reprefill: str = "off",
     topology: Optional[DisaggTopology] = None,
+    replicas: Optional[ReplicaSet] = None,
 ) -> TenantFleet:
     """Build `n_tenants` engines of one system sharing executor + cache.
 
@@ -81,7 +87,11 @@ def build_sim_fleet(
     """
     cfg = get_config(model_name)
     executor = ChannelSim(device_model or DeviceModel())
-    if topology is not None:
+    if replicas is not None:
+        if topology is not None and replicas.topology is None:
+            replicas.topology = topology  # per-replica worker split
+        replicas.attach_sim(executor)
+    elif topology is not None:
         topology.attach_sim(executor)
     cls = ENGINE_CLASSES[system]
     # one planner per fleet: the compute channel is shared, so the anti-herd
@@ -120,4 +130,5 @@ def build_sim_fleet(
         engines[tenant] = eng
         workloads[tenant] = wl
     return TenantFleet(engines=engines, executor=executor, cache=shared_cache,
-                       workloads=workloads, topology=topology)
+                       workloads=workloads, topology=topology,
+                       replicas=replicas)

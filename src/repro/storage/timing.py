@@ -197,14 +197,18 @@ class ChannelSim(BaseExecutor):
         """Enqueue a transfer on `channel` no earlier than `at`.
 
         `after` chains legs of a staged transfer (SSD leg -> PCIe leg): the
-        handle completes no earlier than the upstream handle, and carries the
-        upstream payload through.
+        downstream channel is occupied no earlier than the upstream leg's
+        completion (bytes cannot cross PCIe before they exist in host
+        memory), so a chained leg queues later requests on its channel
+        behind the *real* transfer window, and carries the upstream payload
+        through.
         """
         dur = self.io_duration(nbytes, n_requests, channel)
+        if after is not None:
+            at = max(at, after.ready_at)
         end = self._occupy(channel, dur, f"io:{channel}", at)
         h = IOHandle(ready_at=end)
         if after is not None:
-            h.ready_at = max(h.ready_at, after.ready_at)
             h.result = after.result
         if fn is not None:
             h.result = fn()  # execute side-effect immediately (bookkeeping only)
@@ -232,10 +236,14 @@ class ChannelSim(BaseExecutor):
         paid once for the whole batch.  A single-item batch is priced exactly
         like `compute_at`, so batching degenerates to the serial timeline at
         concurrency 1.  Returns ([result, ...], end_time).
+
+        Per-item residuals clamp at zero: an op whose ``hbm_bytes`` excludes
+        part of the shared weight stream must not *discount* other members'
+        traffic below what they would pay alone.
         """
         flops = sum(it[1] for it in items)
         weight = max((it[3] for it in items), default=0.0)
-        hbm = weight + sum(it[2] - it[3] for it in items)
+        hbm = weight + sum(max(0.0, it[2] - it[3]) for it in items)
         dur = self.model.compute_time(flops, hbm)
         label = f"compute:{tag}" + (f"[x{len(items)}]" if len(items) > 1 else "")
         end = self._occupy(channel, dur, label, at)

@@ -119,6 +119,93 @@ def test_batched_occupations_conserve_busy_time(ops):
     assert event_busy == pytest.approx(expect, rel=1e-12)
 
 
+chained_op_strategy = st.lists(
+    st.tuples(
+        st.floats(0.0, 5.0),  # upstream earliest-start
+        st.floats(0.0, 5.0),  # downstream submit time (may precede upstream end)
+        st.integers(1, 1 << 24),  # upstream nbytes
+        st.integers(1, 1 << 22),  # downstream nbytes
+    ),
+    min_size=1,
+    max_size=30,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=chained_op_strategy)
+def test_chained_leg_occupies_after_upstream_completes(ops):
+    """A chained leg (`after=`) may not occupy its channel before the
+    upstream leg's completion: bytes cannot cross PCIe before they exist in
+    host memory.  Pre-fix, only the handle's ready_at was maxed while the
+    occupancy started at `at` — understating queueing for every later
+    request on the downstream channel."""
+    sim = ChannelSim(DeviceModel())
+    for at_up, at_down, n_up, n_down in ops:
+        up = sim.submit_io_at(None, nbytes=n_up, n_requests=1,
+                              channel="ssd", at=at_up)
+        down = sim.submit_io_at(None, nbytes=n_down, n_requests=1,
+                                channel="pcie", at=at_down, after=up)
+        start, end, res, _ = sim.events[-1]
+        assert res == "pcie"
+        assert start >= up.ready_at - 1e-12, (
+            f"chained pcie leg started at {start} before its ssd payload "
+            f"existed (upstream ready_at={up.ready_at})")
+        assert down.ready_at == end
+        # the handle semantics the engine always relied on still hold
+        assert down.ready_at >= up.ready_at
+
+
+def test_chained_leg_queues_later_requests_behind_real_window():
+    """Deterministic regression for the submit_io_at(after=...) fix: a PCIe
+    leg chained behind a slow SSD leg occupies [ssd_end, ssd_end + dur), so
+    an unrelated PCIe transfer submitted later queues behind the *real*
+    window.  Pre-fix the chained leg occupied [at, at + dur) and the later
+    transfer started too early."""
+    model = DeviceModel()
+    sim = ChannelSim(model)
+    ssd = sim.submit_io_at(None, nbytes=1 << 28, n_requests=1,
+                           channel="ssd", at=0.0)  # ~36ms leg
+    pcie = sim.submit_io_at(None, nbytes=1 << 20, n_requests=1,
+                            channel="pcie", at=0.0, after=ssd)
+    start, end, _, _ = sim.events[-1]
+    assert start == pytest.approx(ssd.ready_at, rel=1e-12)
+    assert pcie.ready_at == pytest.approx(
+        ssd.ready_at + model.pcie_time(1 << 20), rel=1e-12)
+    # an independent transfer right after must queue behind the chained leg
+    other = sim.submit_io_at(None, nbytes=1 << 20, n_requests=1,
+                             channel="pcie", at=0.0)
+    assert other.ready_at == pytest.approx(
+        pcie.ready_at + model.pcie_time(1 << 20), rel=1e-12)
+
+
+def test_chained_leg_carries_upstream_payload():
+    sim = ChannelSim(DeviceModel())
+    up = sim.submit_io_at(lambda: "payload", nbytes=4096, n_requests=1,
+                          channel="ssd", at=0.0)
+    down = sim.submit_io_at(None, nbytes=4096, n_requests=1,
+                            channel="pcie", at=0.0, after=up)
+    assert down.result == "payload"
+
+
+def test_batched_compute_clamps_negative_residuals():
+    """compute_batch_at: an item whose hbm_bytes undercuts the shared weight
+    stream (negative residual) must not discount other members' traffic —
+    residuals clamp at zero.  The batch is memory-bound on purpose (tiny
+    FLOPs, GB-scale weights) so the hbm term decides the price: pre-fix,
+    hbm = 4e9 + (1e9 + (1e9 - 4e9)) = 2e9 silently under-priced it."""
+    model = DeviceModel()
+    sim = ChannelSim(model)
+    items = [(None, 1e6, 5e9, 4e9),  # residual +1e9
+             (None, 1e6, 1e9, 4e9)]  # residual -3e9 -> clamps to 0
+    _, end = sim.compute_batch_at(items, tag="decode", at=0.0)
+    expected = model.compute_time(2e6, 4e9 + 1e9 + 0.0)
+    assert end == pytest.approx(expected, rel=1e-12)
+    # a batch priced below the heaviest member alone would be unphysical
+    _, solo_end = ChannelSim(model).compute_at(
+        None, flops=1e6, hbm_bytes=5e9, at=0.0)
+    assert end >= solo_end
+
+
 def test_batched_compute_occupies_once_and_prices_shared_weights():
     """compute_batch_at: one occupancy; weights paid once, KV summed; a
     single-item batch is priced exactly like compute_at."""

@@ -46,6 +46,34 @@ class TestTopology:
         with pytest.raises(ValueError):
             DisaggTopology.parse(bad)
 
+    def test_parse_rejects_zero_workers_under_optimized_python(self):
+        """The validation must be an explicit ValueError, not an assert:
+        `python -O` strips asserts, so the pre-fix check vanished and
+        `--disaggregate 0:2` built a zero-prefill topology that only died
+        much later in a min() over empty channel lists inside the
+        scheduler."""
+        import os
+        import subprocess
+        import sys
+
+        code = (
+            "from repro.serving.disagg import DisaggTopology\n"
+            "for bad in ('0:2', '2:0', '-1:1'):\n"
+            "    try:\n"
+            "        DisaggTopology.parse(bad)\n"
+            "    except ValueError:\n"
+            "        continue\n"
+            "    raise SystemExit('parse(%r) did not raise' % bad)\n"
+            "print('VALIDATED')\n"
+        )
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = os.path.abspath(src)
+        out = subprocess.run([sys.executable, "-O", "-c", code],
+                             capture_output=True, text=True, env=env)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "VALIDATED" in out.stdout
+
     def test_decode_backends_override_n_decode(self):
         t = DisaggTopology(n_prefill=1, n_decode=7,
                            decode_backends=[object(), object()])

@@ -1,0 +1,290 @@
+"""Data-parallel engine replicas behind one Scheduler.
+
+Sim mode is pinned structurally (admission routes to the least-backlogged
+replica channel, every replica's accelerator carries load, the colocated
+"compute" channel stays idle, `--replicas x --disaggregate` composes into
+per-replica worker splits) and behaviourally (weak scaling: 4 replicas
+serve ~4x the offered load at >= 2x the aggregate decode token rate).  A
+one-replica fleet is pinned *bit-identical* to the colocated scheduler —
+the ReplicaSet machinery itself must never shift a timeline.  Real mode
+moves each plan's decode phase to its replica's backend via the PR-7 pool
+handoff and must reproduce colocated logits exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import (
+    INTERCONNECT,
+    DisaggTopology,
+    ReplicaSet,
+    Request,
+    Scheduler,
+    build_sim_fleet,
+    poisson_arrivals,
+    replica_channel,
+    summarize,
+)
+from repro.storage.timing import ChannelSim, DeviceModel
+
+MODEL = "qwen3-1.7b"
+PREFIX = 512
+
+
+# ---------------------------------------------------------------- ReplicaSet
+class TestReplicaSet:
+    def test_channels_without_topology(self):
+        reps = ReplicaSet(n_replicas=3)
+        assert reps.prefill_channels(1) == ["compute:r1"]
+        assert reps.decode_channels(1) == ["compute:r1"]
+        assert reps.all_channels == ["compute:r0", "compute:r1", "compute:r2"]
+
+    def test_channels_with_per_replica_topology(self):
+        reps = ReplicaSet(n_replicas=2, topology=DisaggTopology(2, 1))
+        assert reps.prefill_channels(0) == ["compute:r0:p0", "compute:r0:p1"]
+        assert reps.decode_channels(1) == ["compute:r1:d0"]
+        assert len(reps.all_channels) == 2 * (2 + 1)
+
+    def test_parse_count(self):
+        assert ReplicaSet.parse("4").n_replicas == 4
+
+    @pytest.mark.parametrize("bad", ["", "0", "-1", "x", "1:2", "2.5"])
+    def test_parse_rejects_malformed(self, bad):
+        with pytest.raises(ValueError):
+            ReplicaSet.parse(bad)
+
+    def test_parse_rejects_zero_replicas_under_optimized_python(self):
+        """Same treatment as DisaggTopology: explicit ValueError, not an
+        assert `python -O` would strip."""
+        import os
+        import subprocess
+        import sys
+
+        code = (
+            "from repro.serving.replicas import ReplicaSet\n"
+            "for bad in ('0', '-2'):\n"
+            "    try:\n"
+            "        ReplicaSet.parse(bad)\n"
+            "    except ValueError:\n"
+            "        continue\n"
+            "    raise SystemExit('parse(%r) did not raise' % bad)\n"
+            "print('VALIDATED')\n"
+        )
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = os.path.abspath(src)
+        out = subprocess.run([sys.executable, "-O", "-c", code],
+                             capture_output=True, text=True, env=env)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "VALIDATED" in out.stdout
+
+    def test_backends_override_replica_count(self):
+        reps = ReplicaSet(n_replicas=7,
+                          backends=[[object()], [object()], [object()]])
+        assert reps.n_replicas == 3
+
+    def test_empty_backend_list_rejected(self):
+        with pytest.raises(ValueError, match="at least one worker backend"):
+            ReplicaSet(backends=[[object()], []])
+
+    def test_attach_sim_is_idempotent(self):
+        ex = ChannelSim(DeviceModel())
+        reps = ReplicaSet(n_replicas=2, topology=DisaggTopology(1, 1))
+        reps.attach_sim(ex)
+        ex.free_at[replica_channel(0) + ":p0"] = 2.5
+        reps.attach_sim(ex)  # must not reset live channel state
+        assert ex.free_at[replica_channel(0) + ":p0"] == 2.5
+        assert INTERCONNECT in ex.free_at
+
+    def test_conflicting_topologies_rejected(self):
+        fleet = build_sim_fleet("contiguous_kv", MODEL, n_tenants=1,
+                                prefix_len=PREFIX, seed=0)
+        with pytest.raises(ValueError, match="per-replica topology"):
+            Scheduler(fleet.engines,
+                      topology=DisaggTopology(1, 1),
+                      replicas=ReplicaSet(2, topology=DisaggTopology(2, 1)))
+
+
+# ----------------------------------------------------------------- sim mode
+def _requests(n, *, rate=100.0, decode=8, seed=0):
+    arr = poisson_arrivals(rate, n, seed=seed)
+    return [Request(request_id=i, suffix=np.arange(4) + i,
+                    tenant=1 + i % 2, arrival=float(t), decode_tokens=decode)
+            for i, t in enumerate(arr)]
+
+
+def _sim_run(replicas=None, topology=None, *, requests=None,
+             max_concurrency=4):
+    fleet = build_sim_fleet("contiguous_kv", MODEL, n_tenants=2,
+                            prefix_len=PREFIX, seed=0,
+                            topology=topology, replicas=replicas)
+    if requests is None:
+        requests = _requests(8)
+    sched = Scheduler(fleet.engines, max_concurrency=max_concurrency,
+                      topology=topology, replicas=replicas)
+    done = sched.run(requests)
+    return done, sched, fleet
+
+
+class TestSimReplicas:
+    def test_single_replica_bit_identical_to_colocated(self):
+        """The replica machinery must not shift timelines: a one-replica
+        fleet reproduces the colocated run exactly — every request's
+        admission/finish/TTFT and every accelerator occupancy (modulo the
+        channel's name)."""
+        ref, _, f_ref = _sim_run(None)
+        got, sched, f_got = _sim_run(ReplicaSet(n_replicas=1))
+        assert sched.replica_admits == [len(got)]
+        for a, b in zip(ref, got):
+            assert b.admitted == a.admitted
+            assert b.finish == a.finish
+            assert b.ttft == a.ttft
+        ev_ref = [(s, e, tag) for s, e, res, tag in f_ref.executor.events
+                  if res == "compute"]
+        ev_got = [(s, e, tag) for s, e, res, tag in f_got.executor.events
+                  if res == replica_channel(0)]
+        assert ev_got == ev_ref
+
+    def test_replicas_spread_load_and_colocated_channel_stays_idle(self):
+        done, sched, fleet = _sim_run(ReplicaSet(n_replicas=4),
+                                      max_concurrency=16,
+                                      requests=_requests(16, rate=400.0))
+        assert len(done) == 16
+        ex = fleet.executor
+        for r in range(4):
+            assert ex.busy[replica_channel(r)] > 0.0, f"replica {r} idle"
+        assert ex.busy["compute"] == 0.0
+        assert all(n > 0 for n in sched.replica_admits)
+        assert sum(sched.replica_admits) == 16
+        # storage stays a shared medium
+        assert ex.busy["ssd"] > 0.0 and ex.busy["pcie"] > 0.0
+
+    def test_weak_scaling_doubles_decode_rate_at_4_replicas(self):
+        """The bench-trend gate's invariant at test scale: scaling replicas
+        *and* offered load 4x must lift the aggregate decode token rate by
+        at least 2x (perfect scaling would be ~4x; admission and shared
+        ssd/pcie keep it below that)."""
+        base, _, _ = _sim_run(
+            None, requests=_requests(6, rate=200.0, decode=32),
+            max_concurrency=4)
+        quad, _, _ = _sim_run(
+            ReplicaSet(n_replicas=4),
+            requests=_requests(24, rate=800.0, decode=32),
+            max_concurrency=16)
+        r1 = summarize(base)["decode_tok_rate"]
+        r4 = summarize(quad)["decode_tok_rate"]
+        assert r4 >= 2.0 * r1, (r1, r4)
+
+    def test_composes_with_disaggregation(self):
+        """--replicas 2 x --disaggregate 1:1: each replica owns its own
+        prefill/decode worker pair, handoffs stay within the replica, and
+        the interconnect remains fleet-shared."""
+        reqs = _requests(8, rate=200.0)
+        done, sched, fleet = _sim_run(ReplicaSet(n_replicas=2),
+                                      topology=DisaggTopology(1, 1),
+                                      requests=reqs, max_concurrency=8)
+        assert len(done) == 8
+        assert sched.handoffs == 8
+        ex = fleet.executor
+        for r in range(2):
+            assert ex.busy[f"compute:r{r}:p0"] > 0.0
+            assert ex.busy[f"compute:r{r}:d0"] > 0.0
+        assert ex.busy["compute"] == 0.0
+        assert ex.busy[INTERCONNECT] > 0.0
+        assert all(n > 0 for n in sched.replica_admits)
+
+    def test_admission_prefers_least_backlogged_replica(self):
+        """Back-to-back arrivals at 2 replicas alternate channels: the
+        second plan must not queue behind the first while the other
+        replica's accelerator is free."""
+        reqs = [Request(request_id=i, suffix=np.arange(4) + i,
+                        tenant=1 + i % 2, arrival=0.0, decode_tokens=4)
+                for i in range(2)]
+        done, sched, fleet = _sim_run(ReplicaSet(n_replicas=2),
+                                      requests=reqs, max_concurrency=4)
+        assert sched.replica_admits == [1, 1]
+
+
+# ---------------------------------------------------------------- real mode
+REAL_PREFIX = 128
+REAL_SUFFIX = 24
+REAL_DECODE = 3
+
+
+@pytest.fixture(scope="module")
+def real_stack():
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.models import transformer as T
+
+    cfg = reduced_config("qwen2.5-7b", n_layers=2)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prefix = (np.arange(REAL_PREFIX) % cfg.vocab_size).astype(np.int64)
+    return cfg, params, prefix
+
+
+def _real_engine(real_stack):
+    from repro.core import build_real_session
+    from repro.core.backends import RealCompute
+    from repro.serving.tenancy import ENGINE_CLASSES
+    from repro.storage.timing import RealExecutor
+
+    cfg, params, prefix = real_stack
+    sess = build_real_session(cfg, params, prefix, chunk_tokens=16,
+                              in_memory=True)
+    return ENGINE_CLASSES["contiguous_kv"](
+        sess, RealCompute(cfg, params), RealExecutor(), device_cap=64,
+        host_cap=128, budget=0.5, period=2, subperiod=1)
+
+
+def _real_requests(cfg, n=3):
+    return [Request(request_id=r,
+                    suffix=(np.arange(REAL_SUFFIX) + 3 * r) % cfg.vocab_size,
+                    decode_tokens=REAL_DECODE) for r in range(n)]
+
+
+class TestRealReplicas:
+    def test_replicas_bit_identical_to_colocated_at_c1(self, real_stack):
+        """Replica backends share the colocated params and receive the
+        decode phase via the pool swap handoff, so logits, greedy tokens
+        and unit selections must match the colocated run bit-for-bit."""
+        from repro.core.backends import RealCompute
+
+        cfg, params, _ = real_stack
+        ref = Scheduler(_real_engine(real_stack), max_concurrency=1).run(
+            _real_requests(cfg))
+        reps = ReplicaSet(backends=[[RealCompute(cfg, params)],
+                                    [RealCompute(cfg, params)]])
+        sched = Scheduler(_real_engine(real_stack), max_concurrency=1,
+                          replicas=reps)
+        got = sched.run(_real_requests(cfg))
+        assert sched.handoffs == len(got) == 3
+        assert sched.handoff_bytes > 0
+        for ca, cb in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(ca.result),
+                                          np.asarray(cb.result))
+            assert cb.trace.decode_tokens_out == ca.trace.decode_tokens_out
+            for l in ca.trace.selected_per_layer:
+                np.testing.assert_array_equal(
+                    cb.trace.selected_per_layer[l],
+                    ca.trace.selected_per_layer[l])
+
+    def test_concurrent_plans_spread_over_replicas(self, real_stack):
+        from repro.core.backends import RealCompute
+
+        cfg, params, _ = real_stack
+        reps = ReplicaSet(backends=[[RealCompute(cfg, params)],
+                                    [RealCompute(cfg, params)]])
+        sched = Scheduler(_real_engine(real_stack), max_concurrency=2,
+                          replicas=reps)
+        done = sched.run(_real_requests(cfg, n=4))
+        assert len(done) == 4
+        assert all(n > 0 for n in sched.replica_admits)
+        assert sum(sched.replica_admits) == 4
+
+    def test_real_replicas_require_backends(self, real_stack):
+        cfg = real_stack[0]
+        sched = Scheduler(_real_engine(real_stack), max_concurrency=1,
+                          replicas=ReplicaSet(n_replicas=2))
+        with pytest.raises(ValueError, match="ReplicaSet.backends"):
+            sched.run(_real_requests(cfg, n=1))
