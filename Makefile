@@ -13,10 +13,12 @@
 #                       benchmark with its decode/mixed gates runs once in
 #                       CI, inside bench-trend; local `verify-serving`
 #                       still runs both), plus verify-hybrid (the
-#                       compute-or-load hybrid re-prefill suite) and
+#                       compute-or-load hybrid re-prefill suite),
 #                       verify-disagg (prefill/decode disaggregation:
-#                       topology, KV handoff, real-mode bit-parity) in the
-#                       same serving-regression job;
+#                       topology, KV handoff, real-mode bit-parity) and
+#                       verify-store (three-tier content-addressed prefix
+#                       store + cache property invariants) in the same
+#                       serving-regression job;
 #   bench-trend       — the serving throughput benchmark (all of its
 #                       acceptance asserts) + its JSON vs the committed
 #                       baseline (benchmarks/check_trend.py regression
@@ -52,6 +54,12 @@ DISAGG_TESTS := tests/test_disagg.py
 KERNEL_TESTS := tests/test_kernels.py tests/test_tail_pool.py \
 	tests/test_device_pool.py
 
+# three-tier content-addressed prefix store: segment-log layout/compaction,
+# the HBM->DRAM->SSD demotion cascade, digest refcounts/dedup and the
+# cross-policy cache property invariants (runs in the serving-regression CI
+# job via verify-store; ignored by verify-core-tests)
+STORE_TESTS := tests/test_tierstore.py tests/test_cache_props.py
+
 # multi-device serving: data-parallel replicas behind one Scheduler, the
 # tensor-parallel paged decode attend (8-virtual-device parity vs the
 # single-device oracle), the serving mesh factory, and the sharded sparse
@@ -61,8 +69,8 @@ SHARDED_TESTS := tests/test_sharded_sparse.py tests/test_sharding_small.py \
 	tests/test_sharded_decode.py tests/test_replicas.py
 
 .PHONY: verify verify-core verify-core-tests verify-kernels verify-serving \
-	verify-serving-tests verify-hybrid verify-disagg verify-sharded test \
-	bench-throughput bench-baseline bench-trend
+	verify-serving-tests verify-hybrid verify-disagg verify-store \
+	verify-sharded test bench-throughput bench-baseline bench-trend
 
 verify: test bench-throughput
 
@@ -78,6 +86,7 @@ verify-core-tests:
 		$(addprefix --ignore=,$(KERNEL_TESTS)) \
 		$(addprefix --ignore=,$(HYBRID_TESTS)) \
 		$(addprefix --ignore=,$(DISAGG_TESTS)) \
+		$(addprefix --ignore=,$(STORE_TESTS)) \
 		$(addprefix --ignore=,$(SHARDED_TESTS))
 
 # fast inner loop for kernel / TailPool / DeviceTailPool work
@@ -93,13 +102,16 @@ verify-hybrid:
 verify-disagg:
 	$(PY) -m pytest -q --durations=15 $(DISAGG_TESTS)
 
+verify-store:
+	$(PY) -m pytest -q --durations=15 $(STORE_TESTS)
+
 # multi-device lane: 8 forced host devices so the TP parity test, the
 # replica suite and the sharded sparse sweep all see a real mesh
 verify-sharded:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PY) -m pytest -q --durations=15 $(SHARDED_TESTS)
 
-verify-serving: verify-serving-tests verify-hybrid verify-disagg
+verify-serving: verify-serving-tests verify-hybrid verify-disagg verify-store
 	$(PY) benchmarks/bench_throughput.py --quick
 
 bench-throughput:

@@ -39,6 +39,15 @@ and reports per-count decode token rate plus the 4-replica
 ``scaling_ratio``.  Gated: 4 replicas must reach >= 2x the single-replica
 decode rate (also pinned by bench-trend).
 
+A tier-store section serves a zipfian many-prefix multi-tenant trace (six
+tenants, the two hottest sharing one system prompt) through the flat
+two-tier cache and the content-addressed three-tier ``TieredPrefixStore``
+and reports per-tier hit rates, SSD-log read amplification, dedup savings
+and P95 TTFT per arm.  Gated: tiered must beat flat on BOTH overall hit
+rate and P95 TTFT (``p95_ttft_speedup`` / ``hit_rate_gain``, pinned by
+bench-trend), and the two tenants' shared prompt must dedupe to exactly
+one byte-verified payload copy.
+
 A real-mode section serves a tiny real model (wall clock, interpret-mode
 Pallas kernels) at concurrency 4 with and without the real driver's
 batched paged decode attention and reports decode_tok_rate b=1 vs b<=4
@@ -283,6 +292,7 @@ def run(quick: bool = False):
     rows += _hybrid_sweep_rows()
     rows += _disagg_sweep_rows()
     rows += _replica_sweep_rows()
+    rows += _tierstore_sweep_rows()
     rows += _real_decode_rows(quick)
     return rows
 
@@ -398,6 +408,138 @@ def _replica_sweep_rows():
     assert ratio >= 2.0, (
         f"4-replica weak scaling below 2x: {rates[4]:.1f} tok/s vs "
         f"{rates[1]:.1f} tok/s single-replica")
+    return rows
+
+
+def _tierstore_sweep_rows():
+    """Three-tier content-addressed store vs flat two-tier cache (sim).
+
+    A zipfian many-prefix multi-tenant trace: six tenants whose request
+    rates follow a zipf(1.1) popularity ranking, the two hottest serving
+    one identical system prompt (one content digest).  Both arms serve the
+    byte-identical request stream — same arrivals, same tenant draws, same
+    digest-keyed importance fields — through the same
+    device/host-capacity ContiguousKV fleet; only the cache differs:
+
+    - **flat**: the two-tier ``AttentionGuidedCache`` (tenant-keyed — it
+      cannot see that two tenants share a prompt, and host victims drop);
+    - **tiered**: ``TieredPrefixStore`` with a log-structured SSD tier and
+      content-addressed keys (shared prompt dedupes to one resident copy,
+      host victims demote into the segment log and come back as SSD hits).
+
+    Reported: per-tier hit rates, overall hit-rate gain, SSD-log read
+    amplification, dedup savings, and P95 TTFT per arm.  Gated: the tiered
+    store must beat flat on BOTH overall hit rate and P95 TTFT, the shared
+    prompt must be charged to both tenants while held once
+    (``dedup_saved_units``), and a memory-mode store must byte-verify that
+    two tenants' identical prompt holds exactly one payload copy.  The
+    headline ``p95_ttft_speedup`` / ``hit_rate_gain`` rows are additionally
+    pinned by the bench-trend job.  The sim is deterministic, so the
+    numbers are exact run-to-run."""
+    from repro.core.cache import DEVICE, HOST, SSD
+    from repro.storage.tierstore import TieredPrefixStore
+
+    model_name, prefix_len = "qwen3-1.7b", 512
+    n_tenants, n_req, conc, rate = 6, 48, 4, 150.0
+    device_cap, host_cap, ssd_cap = 128, 256, 8192
+    digests = {1: "prompt-shared", 2: "prompt-shared"}
+    digests.update({t: f"prompt-t{t}" for t in range(3, n_tenants + 1)})
+
+    rng = np.random.default_rng(23)
+    ranks = np.arange(1, n_tenants + 1, dtype=np.float64)
+    pmass = 1.0 / ranks ** 1.1
+    pmass /= pmass.sum()
+    tenants = rng.choice(np.arange(1, n_tenants + 1), size=n_req, p=pmass)
+    arrivals = poisson_arrivals(rate, n_req, seed=5)
+    suffixes = [rng.integers(0, 1000, 32) for _ in range(n_req)]
+
+    def serve(tiered: bool):
+        # both arms get the digests (identical workload fields); only the
+        # tiered arm's cache is content-addressed and SSD-backed
+        fleet = build_sim_fleet(
+            "contiguous_kv", model_name, n_tenants=n_tenants,
+            prefix_len=prefix_len, device_cap=device_cap, host_cap=host_cap,
+            ssd_cap=ssd_cap if tiered else 0, prefix_digests=digests, seed=3)
+        sched = Scheduler(fleet.engines, policy="fcfs", max_concurrency=conc)
+        reqs = [Request(request_id=i, suffix=suffixes[i],
+                        arrival=float(arrivals[i]), tenant=int(tenants[i]))
+                for i in range(n_req)]
+        s = summarize(sched.run(reqs))
+        return s, fleet
+
+    rows = []
+    stats = {}
+    for label, tiered in (("flat", False), ("tiered", True)):
+        s, fleet = serve(tiered)
+        cache = fleet.cache
+        total = sum(cache.hits.values()) + cache.misses
+        hit_rate = sum(cache.hits.values()) / max(total, 1)
+        stats[label] = (s, fleet, hit_rate)
+        tag = f"serving/tierstore/{label}"
+        rows += [
+            (f"{tag}/p95_ttft_ms", s["p95_ttft"] * 1e3, "ms"),
+            (f"{tag}/p50_ttft_ms", s["p50_ttft"] * 1e3, "ms"),
+            (f"{tag}/goodput_rps", s["goodput_rps"], "req/s"),
+            (f"{tag}/hit_rate", hit_rate, "frac"),
+            (f"{tag}/hit_rate_device",
+             cache.hits[DEVICE] / max(total, 1), "frac"),
+            (f"{tag}/hit_rate_host", cache.hits[HOST] / max(total, 1),
+             "frac"),
+        ]
+        if tiered:
+            rows += [
+                (f"{tag}/hit_rate_ssd", cache.hits[SSD] / max(total, 1),
+                 "frac"),
+                (f"{tag}/ssd_read_amplification",
+                 cache.read_amplification(), "x"),
+                (f"{tag}/ssd_live_mb",
+                 cache.ssd.layout.live_units() * cache.unit_bytes / 1e6,
+                 "MB"),
+                (f"{tag}/dedup_saved_units",
+                 float(cache.dedup_saved_units()), "units"),
+            ]
+    (s_flat, _, rate_flat) = stats["flat"]
+    (s_tier, fleet_tier, rate_tier) = stats["tiered"]
+    rows += [
+        ("serving/tierstore/p95_ttft_speedup",
+         s_flat["p95_ttft"] / s_tier["p95_ttft"], "x"),
+        ("serving/tierstore/hit_rate_gain", rate_tier / max(rate_flat, 1e-9),
+         "x"),
+    ]
+    # acceptance gates (enforced standalone + harness, pinned by check_trend)
+    assert rate_tier > rate_flat, (
+        f"tiered store hit rate not above flat: {rate_tier:.3f} vs "
+        f"{rate_flat:.3f}")
+    assert s_tier["p95_ttft"] < s_flat["p95_ttft"], (
+        f"tiered store P95 TTFT not below flat: {s_tier['p95_ttft']:.4f}s "
+        f"vs {s_flat['p95_ttft']:.4f}s")
+    cache = fleet_tier.cache
+    assert cache.digest_tenants.get("prompt-shared") == {1, 2}, (
+        "shared prompt not referenced by both hot tenants")
+    assert cache.dedup_saved_units() > 0, (
+        "content addressing saved no resident units for the shared prompt")
+    usage = cache.tenant_usage()
+    assert usage[1] == usage[2], (
+        "tenants sharing one prompt diverged in per-tenant accounting")
+
+    # byte-verified dedup: a memory-mode store holding the model's actual
+    # unit payloads for two tenants' identical prompt keeps ONE copy
+    layout = next(iter(fleet_tier.engines.values())).session.store.layout
+    ub = layout.unit_bytes
+    n_units = 8
+    with TieredPrefixStore(2 * n_units, n_units, 4 * n_units, unit_bytes=ub,
+                           payload_mode="memory", unit_shape=(ub // 2,),
+                           dtype=np.float16) as ts:
+        for tenant in (1, 2):
+            for u in range(n_units):
+                ts.insert(("prompt-shared", 0, u), tenant=tenant,
+                          payload=np.full(ub // 2, u, np.float16))
+        held = ts.payload_bytes()
+        assert held == n_units * ub, (
+            f"two tenants' shared prompt holds {held}B, expected one "
+            f"{n_units * ub}B copy")
+        rows.append(("serving/tierstore/dedup_payload_copies",
+                     held / (n_units * ub), "x"))
     return rows
 
 
@@ -748,7 +890,10 @@ def main():
           "force-load at 16x-derated SSD and stays silent at 1x; "
           "a prefill:decode split beats colocated p95 TTFT under the "
           "decode-heavy Poisson stream; 4 data-parallel replicas at least "
-          "double the single-replica decode token rate; real-mode batched "
+          "double the single-replica decode token rate; the three-tier "
+          "content-addressed store beats the flat cache on hit rate and "
+          "p95 TTFT under the zipfian multi-tenant trace with the shared "
+          "prompt deduped to one byte-verified copy; real-mode batched "
           "decode raises decode_tok_rate; device-resident pools beat the "
           "host-resident path on the b=1 step rate and move no pool bytes "
           "over H2D")

@@ -49,6 +49,11 @@ DEFAULT_PATTERNS = (
     # deterministic sim: 4-replica weak-scaling throughput ratio (the
     # benchmark asserts >= 2.0; this pins the achieved value)
     "serving/replicas/scaling_ratio",
+    # deterministic sim: the three-tier content-addressed store's win over
+    # the flat two-tier cache on the zipfian multi-tenant trace (the
+    # benchmark asserts both > 1; this pins the achieved values)
+    "serving/tierstore/p95_ttft_speedup",
+    "serving/tierstore/hit_rate_gain",
 )
 
 

@@ -1,24 +1,29 @@
-"""Attention-guided two-tier cache (§4.4) + baseline policies.
+"""Attention-guided tiered cache (§4.4) + baseline policies.
 
 Score S_j = I_j x F_j: cumulative attention-based importance times access
-frequency. Two min-heaps (device tier, host tier) evict the lowest-scored
-ContiguousChunk; device evictions demote to host when their score beats the
-host minimum, else drop. Scores persist in an in-memory table even after
-eviction (the paper stores them "including those evicted from memory").
+frequency. Lazy min-heaps per tier evict the lowest-scored ContiguousChunk;
+evictions cascade down the tier chain (device -> host by default; the
+three-tier store in ``repro.storage.tierstore`` appends an SSD tier) when the
+victim's score beats the destination minimum, else the victim is dropped out
+the bottom. Scores persist in an in-memory table even after eviction (the
+paper stores them "including those evicted from memory").
 
-Keys are (layer, unit) pairs. Capacities are in units (chunks/blocks).
+Keys are (layer, unit) pairs, (tenant, layer, unit) triples in multi-tenant
+serving, or (prefix_digest, layer, unit) when the content-addressed tier
+store shares identical prefixes across tenants. Capacities are in units
+(chunks/blocks).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from collections import OrderedDict
 from typing import Dict, Hashable, Iterable, Optional, Set, Tuple
 
-Key = Tuple[int, int]  # (layer, unit) — or (tenant, layer, unit) multi-tenant
+Key = Tuple[int, int]  # (layer, unit) — or (tenant|digest, layer, unit)
 
 DEVICE = "device"
 HOST = "host"
+SSD = "ssd"
 
 
 def tenant_of(key) -> int:
@@ -35,57 +40,76 @@ class CachePolicy:
     One policy instance may be shared by several tenants (multi-tenant
     serving): keys are then tenant-namespaced 3-tuples and per-tenant
     hit/miss/occupancy accounting is kept alongside the global counters.
+
+    Tiering is generic over ``_tier_chain``: ``insert`` admits into a tier,
+    ``_enforce`` evicts the lowest-priority member of any over-capacity tier
+    and demotes it down the chain when it beats the destination's minimum
+    (``_admits``), else hands it to ``_on_drop``. Subclasses customize via
+    the ``_track`` / ``_on_demote`` / ``_on_drop`` / ``_accept_payload`` /
+    ``_owners_of`` hooks rather than overriding the cascade itself.
     """
+
+    _tier_chain: Tuple[str, ...] = (DEVICE, HOST)
 
     def __init__(self, device_capacity: int, host_capacity: int):
         self.device_capacity = device_capacity
         self.host_capacity = host_capacity
-        self.tiers: Dict[str, Set[Key]] = {DEVICE: set(), HOST: set()}
-        self.hits = {DEVICE: 0, HOST: 0}
+        self.tiers: Dict[str, Set[Key]] = {t: set() for t in self._tier_chain}
+        self.hits = {t: 0 for t in self._tier_chain}
         self.misses = 0
-        # per-tenant counters: tenant -> {"device": hits, "host": hits, "miss": n}
+        # per-tenant counters: tenant -> {tier: hits..., "miss": n}
         self.tenant_stats: Dict[int, Dict[str, int]] = {}
 
-    def _tstat(self, key) -> Dict[str, int]:
-        t = tenant_of(key)
+    def _capacity(self, tier: str) -> int:
+        if tier == DEVICE:
+            return self.device_capacity
+        if tier == HOST:
+            return self.host_capacity
+        raise KeyError(tier)
+
+    def _tstat(self, key, tenant: Optional[int] = None) -> Dict[str, int]:
+        t = tenant_of(key) if tenant is None else tenant
         st = self.tenant_stats.get(t)
         if st is None:
-            st = self.tenant_stats[t] = {DEVICE: 0, HOST: 0, "miss": 0}
+            st = self.tenant_stats[t] = {tr: 0 for tr in self._tier_chain}
+            st["miss"] = 0
         return st
 
-    def lookup(self, key: Key) -> Optional[str]:
-        if key in self.tiers[DEVICE]:
-            self.hits[DEVICE] += 1
-            self._tstat(key)[DEVICE] += 1
-            self.on_access(key)
-            return DEVICE
-        if key in self.tiers[HOST]:
-            self.hits[HOST] += 1
-            self._tstat(key)[HOST] += 1
-            self.on_access(key)
-            return HOST
+    def lookup(self, key: Key, tenant: Optional[int] = None) -> Optional[str]:
+        for tier in self._tier_chain:
+            if key in self.tiers[tier]:
+                self.hits[tier] += 1
+                self._tstat(key, tenant)[tier] += 1
+                self.on_access(key)
+                return tier
         self.misses += 1
-        self._tstat(key)["miss"] += 1
+        self._tstat(key, tenant)["miss"] += 1
         return None
+
+    def _owners_of(self, key: Key) -> Tuple[int, ...]:
+        """Tenants a resident key is accounted to (content-addressed stores
+        return every tenant holding a reference to the key's digest)."""
+        return (tenant_of(key),)
 
     def tenant_usage(self) -> Dict[int, Dict[str, int]]:
         """Resident units per tenant per tier (scan; capacities are small)."""
         usage: Dict[int, Dict[str, int]] = {}
-        for tier in (DEVICE, HOST):
+        for tier in self._tier_chain:
             for key in self.tiers[tier]:
-                u = usage.setdefault(tenant_of(key), {DEVICE: 0, HOST: 0})
-                u[tier] += 1
+                for owner in self._owners_of(key):
+                    u = usage.setdefault(owner, {t: 0 for t in self._tier_chain})
+                    u[tier] += 1
         return usage
 
     def resident_units(self, tenant: int, tier: Optional[str] = None) -> int:
-        tiers = (DEVICE, HOST) if tier is None else (tier,)
-        return sum(1 for t in tiers for k in self.tiers[t] if tenant_of(k) == tenant)
+        tiers = self._tier_chain if tier is None else (tier,)
+        return sum(1 for t in tiers for k in self.tiers[t]
+                   if tenant in self._owners_of(k))
 
     def contains(self, key: Key) -> Optional[str]:
-        if key in self.tiers[DEVICE]:
-            return DEVICE
-        if key in self.tiers[HOST]:
-            return HOST
+        for tier in self._tier_chain:
+            if key in self.tiers[tier]:
+                return tier
         return None
 
     # subclass hooks -----------------------------------------------------------
@@ -95,31 +119,70 @@ class CachePolicy:
     def priority(self, key: Key) -> float:
         raise NotImplementedError
 
+    def _track(self, key: Key, tier: str):
+        """Index a key that just became resident in `tier`."""
+
+    def _on_demote(self, key: Key, src: str, dst: str):
+        """A victim moved down the chain from `src` to `dst`."""
+
+    def _on_move(self, key: Key, src: str, dst: str):
+        """A resident key was explicitly re-inserted into another tier
+        (promotion path; demotions go through ``_on_demote``)."""
+
+    def _on_drop(self, key: Key, tier: str):
+        """A victim fell out the bottom of the chain (no longer resident)."""
+
+    def _accept_payload(self, key: Key, payload):
+        """Retain the KV bytes for a key (tier stores only; default drops)."""
+
     # insertion with eviction cascade ------------------------------------------
-    def insert(self, key: Key, tier: str = DEVICE):
-        if self.contains(key) == tier:
+    def insert(self, key: Key, tier: str = DEVICE, *,
+               tenant: Optional[int] = None, payload=None):
+        if payload is not None:
+            self._accept_payload(key, payload)
+        if tenant is not None:
+            self._note_owner(key, tenant)
+        resident = self.contains(key)
+        if resident == tier:
+            self.on_access(key)
             return
-        if self.contains(key):  # promote/demote: remove from other tier first
-            other = self.contains(key)
-            self.tiers[other].discard(key)
+        if resident is not None:
+            self.tiers[resident].discard(key)
+            self._on_move(key, resident, tier)
         self.tiers[tier].add(key)
         self.on_access(key)
+        self._track(key, tier)
         self._enforce(tier)
 
+    def _note_owner(self, key: Key, tenant: int):
+        """Record that `tenant` references `key` (content-addressed stores)."""
+
+    def _demote_targets(self, tier: str) -> Tuple[str, ...]:
+        chain = self._tier_chain
+        return tuple(dst for dst in chain[chain.index(tier) + 1:]
+                     if self._capacity(dst) > 0)
+
+    def _admits(self, tier: str, prio: float) -> bool:
+        return (len(self.tiers[tier]) < self._capacity(tier)
+                or prio > self._min_priority(tier))
+
     def _enforce(self, tier: str):
-        cap = self.device_capacity if tier == DEVICE else self.host_capacity
-        while len(self.tiers[tier]) > cap:
+        while len(self.tiers[tier]) > self._capacity(tier):
             victim = self._evict_lowest(tier)
             if victim is None:
                 break
-            if tier == DEVICE:
-                # demote if it beats the host minimum (or host has room)
-                if self.host_capacity > 0 and (
-                    len(self.tiers[HOST]) < self.host_capacity
-                    or self.priority(victim) > self._min_priority(HOST)
-                ):
-                    self.tiers[HOST].add(victim)
-                    self._enforce(HOST)
+            # a victim rejected by the next tier down still gets a shot at
+            # the tiers below it (e.g. a cold device victim skips a full
+            # host full of hotter keys and lands in the SSD log)
+            for dst in self._demote_targets(tier):
+                if self._admits(dst, self.priority(victim)):
+                    self.tiers[dst].add(victim)
+                    self._track(victim, dst)
+                    self._on_demote(victim, tier, dst)
+                    self._enforce(dst)
+                    break
+            else:
+                self._on_drop(victim, tier)
 
     def _evict_lowest(self, tier: str) -> Optional[Key]:
         members = self.tiers[tier]
@@ -138,14 +201,17 @@ class AttentionGuidedCache(CachePolicy):
     """The paper's policy: S = I x F with persistent score table.
 
     Uses lazy min-heaps per tier for O(log n) eviction instead of the O(n)
-    scan in the generic base class.
+    scan in the generic base class. Priorities only ever rise (F increments,
+    I accumulates non-negative attention mass), which is what makes the lazy
+    heap sound: a popped entry whose current priority exceeds its pushed
+    priority is simply re-pushed at the current value.
     """
 
     def __init__(self, device_capacity: int, host_capacity: int):
         super().__init__(device_capacity, host_capacity)
         self.I: Dict[Key, float] = {}
         self.F: Dict[Key, int] = {}
-        self._heaps = {DEVICE: [], HOST: []}
+        self._heaps = {t: [] for t in self._tier_chain}
         self._counter = itertools.count()
 
     def priority(self, key: Key) -> float:
@@ -158,17 +224,9 @@ class AttentionGuidedCache(CachePolicy):
         """I_j += A_j after a request used chunk j (Eq. 2 inputs)."""
         self.I[key] = self.I.get(key, 0.0) + float(attention_score)
 
-    def insert(self, key: Key, tier: str = DEVICE):
-        other = self.contains(key)
-        if other == tier:
-            self.on_access(key)
-            return
-        if other:
-            self.tiers[other].discard(key)
-        self.tiers[tier].add(key)
-        self.on_access(key)
-        heapq.heappush(self._heaps[tier], (self.priority(key), next(self._counter), key))
-        self._enforce(tier)
+    def _track(self, key: Key, tier: str):
+        heapq.heappush(self._heaps[tier],
+                       (self.priority(key), next(self._counter), key))
 
     def _evict_lowest(self, tier: str) -> Optional[Key]:
         heap = self._heaps[tier]
@@ -185,30 +243,25 @@ class AttentionGuidedCache(CachePolicy):
             return key
         return None
 
-    def _enforce(self, tier: str):
-        cap = self.device_capacity if tier == DEVICE else self.host_capacity
-        while len(self.tiers[tier]) > cap:
-            victim = self._evict_lowest(tier)
-            if victim is None:
-                break
-            if tier == DEVICE and self.host_capacity > 0:
-                if (
-                    len(self.tiers[HOST]) < self.host_capacity
-                    or self.priority(victim) > self._min_priority(HOST)
-                ):
-                    self.tiers[HOST].add(victim)
-                    heapq.heappush(
-                        self._heaps[HOST],
-                        (self.priority(victim), next(self._counter), victim),
-                    )
-                    self._enforce(HOST)
-
     def _min_priority(self, tier: str) -> float:
+        # The heap stores priorities as *pushed*; a member whose score rose
+        # since its push would understate the tier minimum and over-admit
+        # demotions, so settle the head until pushed == current. Every member
+        # keeps >= 1 entry pushed at or below its current priority, so the
+        # first settled head is the true minimum.
         heap = self._heaps[tier]
         members = self.tiers[tier]
-        while heap and heap[0][2] not in members:
-            heapq.heappop(heap)
-        return heap[0][0] if heap else float("-inf")
+        while heap:
+            prio, _, key = heap[0]
+            if key not in members:
+                heapq.heappop(heap)
+                continue
+            cur = self.priority(key)
+            if cur > prio:  # stale: score rose since push
+                heapq.heapreplace(heap, (cur, next(self._counter), key))
+                continue
+            return prio
+        return float("-inf")
 
 
 class LRUCache(CachePolicy):

@@ -31,6 +31,7 @@ from repro.core import costmodel as CM
 from repro.core.cache import (
     DEVICE,
     HOST,
+    SSD,
     AttentionGuidedCache,
     CachePolicy,
     ImpressScoreCache,
@@ -81,6 +82,11 @@ class PrefixSession:
     # prefix token ids (real mode): the raw material the hybrid re-prefill
     # planner recomputes KV from; None disables recompute in real mode
     tokens: Optional[np.ndarray] = None
+    # content address of the prefix (e.g. sha256 of its token ids): engines
+    # sharing a content-addressed store key cached units (digest, layer,
+    # unit) so identical prompts across tenants dedupe to one entry; None
+    # keeps tenant-namespaced keys
+    digest: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -98,6 +104,7 @@ class ReprefillTrace:
     tokens_loaded: int = 0
     hits_device: int = 0
     hits_host: int = 0
+    hits_ssd: int = 0  # resident in the tier store's SSD log (not a miss)
     misses: int = 0
     selected_per_period: List[np.ndarray] = dataclasses.field(default_factory=list)
     selected_per_layer: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
@@ -194,6 +201,13 @@ class _EngineBase:
         self.cfg = session.cfg
         self.sim = isinstance(executor, ChannelSim)
         self.tenant = session.tenant
+        # content-addressed keys only when both ends opt in: the session
+        # carries a prefix digest AND the store dedupes across tenants
+        # (flat caches keep tenant-namespaced keys — the control arm)
+        self._digest = (session.digest
+                        if session.digest is not None
+                        and getattr(cache, "content_addressed", False)
+                        else None)
         self._data: Dict[Tuple, np.ndarray] = {}
 
     # -- plan entry points ----------------------------------------------------
@@ -223,7 +237,10 @@ class _EngineBase:
 
     # -- keys ------------------------------------------------------------------
     def _key(self, layer: int, unit: int) -> Tuple:
-        """Cache/data key; tenant-namespaced when sharing a cache."""
+        """Cache/data key; content-addressed (digest-keyed) when the store
+        dedupes across tenants, tenant-namespaced when sharing a flat cache."""
+        if self._digest is not None:
+            return (self._digest, layer, int(unit))
         if self.tenant:
             return (self.tenant, layer, int(unit))
         return (layer, int(unit))
@@ -263,12 +280,12 @@ class _EngineBase:
         block). Defaults to the whole unit (chunk granularity: aligned).
         """
         store = self.session.store
-        missing, host_hits = [], []
+        missing, host_hits, ssd_hits = [], [], []
         for u in units:
             key = self._key(layer, u)
             if key in handles:
                 continue
-            tier = self.cache.lookup(key)
+            tier = self.cache.lookup(key, tenant=self.tenant)
             if tier == DEVICE:
                 trace.hits_device += 1
                 handles[key] = IOHandle(ready_at=clock.t)
@@ -277,10 +294,73 @@ class _EngineBase:
             elif tier == HOST:
                 trace.hits_host += 1
                 host_hits.append(u)
+            elif tier == SSD:
+                trace.hits_ssd += 1
+                ssd_hits.append(u)
             else:
                 trace.misses += 1
                 missing.append(u)
         unit_bytes = store.layout.unit_bytes
+        ssd_nb = ssd_nr = ssd_live = 0
+        if ssd_hits:
+            ssd_keys = [self._key(layer, u) for u in ssd_hits]
+            ssd_nb, ssd_nr, ssd_live = self.cache.ssd_plan(ssd_keys,
+                                                           charge=self.sim)
+        miss_nb = miss_nr = 0
+        if missing:
+            miss_nb, miss_nr = store.run_plan(layer, missing)
+
+        def account_ssd_leg(nbytes, nreq, needed):
+            trace.ssd_bytes += nbytes
+            if speculative:
+                trace.ssd_bytes_spec += nbytes
+            else:
+                trace.ssd_bytes_demand += nbytes
+                trace.needed_bytes += needed
+            trace.ssd_requests += nreq
+            trace.pcie_bytes += nbytes
+
+        def miss_needed():
+            if needed_bytes_per_unit is None:
+                return len(missing) * unit_bytes
+            return sum(needed_bytes_per_unit.get(int(u), unit_bytes)
+                       for u in missing)
+
+        combined = self.sim and bool(ssd_hits) and bool(missing)
+        if combined:
+            # the tier store's log and the prefix store share one physical
+            # SSD, so a layer's two read sets ride a single submission
+            # batch (one fixed latency) and one PCIe leg up — splitting
+            # them would double-charge the per-batch latency the device
+            # model pays once for a pipelined submission
+            nb, nr = ssd_nb + miss_nb, ssd_nr + miss_nr
+            h = self._io(clock, None, nbytes=nb, n_requests=nr,
+                         channel="ssd")
+            h = self._io(clock, None, nbytes=nb, n_requests=1,
+                         channel="pcie", after=h)
+            for u in ssd_hits:
+                handles[self._key(layer, u)] = h
+            for u in missing:
+                handles[self._key(layer, u)] = h
+            account_ssd_leg(ssd_nb, ssd_nr, ssd_live)
+            account_ssd_leg(miss_nb, miss_nr, miss_needed())
+            trace.tokens_loaded += len(missing) * store.layout.unit_tokens
+        elif ssd_hits:
+            # resident in the tier store's SSD log: read the gap-merged
+            # coalesced runs (cheaper request count than the prefix store's
+            # scattered-unit plan when demotion waves landed adjacently),
+            # then the PCIe leg up — the fetch+insert path below promotes
+            # the units back to HBM, completing the attention-guided ladder
+            fetch = None if self.sim else (
+                lambda ks=tuple(ssd_keys): self._fetch_cache_ssd(ks))
+            h = self._io(clock, fetch, nbytes=ssd_nb, n_requests=ssd_nr,
+                         channel="ssd")
+            if self.sim:  # chain the PCIe leg after the SSD leg
+                h = self._io(clock, None, nbytes=ssd_nb, n_requests=1,
+                             channel="pcie", after=h)
+            account_ssd_leg(ssd_nb, ssd_nr, ssd_live)
+            for u in ssd_hits:
+                handles[self._key(layer, u)] = h
         if host_hits:
             nbytes = len(host_hits) * unit_bytes
             h = self._io(clock, self._mk_fetch(layer, host_hits, from_host=True),
@@ -288,30 +368,17 @@ class _EngineBase:
             trace.pcie_bytes += nbytes
             for u in host_hits:
                 handles[self._key(layer, u)] = h
-        if missing:
-            nbytes, nreq = store.run_plan(layer, missing)
+        if missing and not combined:
             fetch = self._mk_fetch(layer, missing, from_host=False)
             if fetch is not None and self.hybrid is not None:
                 # feed the planner's EWMA of measured IO service time
-                fetch = self.hybrid.timed_fetch(fetch, nbytes, nreq)
+                fetch = self.hybrid.timed_fetch(fetch, miss_nb, miss_nr)
             h = self._io(clock, fetch,
-                         nbytes=nbytes, n_requests=nreq, channel="ssd")
+                         nbytes=miss_nb, n_requests=miss_nr, channel="ssd")
             if self.sim:  # chain the PCIe leg after the SSD leg
-                h = self._io(clock, None, nbytes=nbytes, n_requests=1,
+                h = self._io(clock, None, nbytes=miss_nb, n_requests=1,
                              channel="pcie", after=h)
-            trace.ssd_bytes += nbytes
-            if speculative:
-                trace.ssd_bytes_spec += nbytes
-            else:
-                trace.ssd_bytes_demand += nbytes
-                if needed_bytes_per_unit is None:
-                    trace.needed_bytes += len(missing) * unit_bytes
-                else:
-                    trace.needed_bytes += sum(
-                        needed_bytes_per_unit.get(int(u), unit_bytes) for u in missing
-                    )
-            trace.ssd_requests += nreq
-            trace.pcie_bytes += nbytes
+            account_ssd_leg(miss_nb, miss_nr, miss_needed())
             trace.tokens_loaded += len(missing) * store.layout.unit_tokens
             for u in missing:
                 handles[self._key(layer, u)] = h
@@ -342,9 +409,18 @@ class _EngineBase:
                 yield WaitOp(h, tag=tag)
         trace.add_stage(tag, clock.t - t0)
 
+    def _fetch_cache_ssd(self, keys):
+        """Real mode: pull SSD-tier payloads out of the tier store's log."""
+        got = self.cache.ssd_fetch(keys)
+        for k, arr in got.items():
+            self._data[k] = np.asarray(arr)
+        return got
+
     def _insert_cache(self, layer: int, units):
         for u in units:
-            self.cache.insert(self._key(layer, u), DEVICE)
+            key = self._key(layer, u)
+            self.cache.insert(key, DEVICE, tenant=self.tenant,
+                              payload=self._data.get(key))
 
     def _sweep_data(self):
         live = self.cache.tiers[DEVICE] | self.cache.tiers[HOST]
@@ -353,12 +429,16 @@ class _EngineBase:
                 del self._data[key]
 
     def _unit_data(self, layer: int, unit: int) -> np.ndarray:
-        """KV payload of one unit; re-reads from the store if a concurrent
-        plan's sweep evicted it between our wait and our gather."""
-        rec = self._data.get(self._key(layer, unit))
+        """KV payload of one unit; falls back to the tier store's canonical
+        copy (content-addressed dedup), then to a store re-read if a
+        concurrent plan's sweep evicted it between our wait and our gather."""
+        key = self._key(layer, unit)
+        rec = self._data.get(key)
+        if rec is None and hasattr(self.cache, "payload_of"):
+            rec = self.cache.payload_of(key)
         if rec is None:
             rec = self.session.store.read_units(layer, [int(unit)])[int(unit)]
-            self._data[self._key(layer, unit)] = rec
+        self._data[key] = rec
         return rec
 
     # -- hybrid re-prefill (compute-or-load) ----------------------------------
@@ -443,7 +523,8 @@ class _EngineBase:
             for l in range(cfg.n_layers):
                 key = self._key(l, int(u))
                 handles[key] = IOHandle(ready_at=clock.t)
-                self.cache.insert(key, DEVICE)
+                self.cache.insert(key, DEVICE, tenant=self.tenant,
+                                  payload=self._data.get(key))
         trace.recompute_units += len(d.recompute_units)
         trace.recompute_tokens += end
         trace.ssd_bytes_avoided += d.ssd_bytes_avoided

@@ -11,6 +11,7 @@ and cache logic with realistic index dynamics.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -24,6 +25,14 @@ from repro.storage.ssd import ChunkStore
 
 def _geometry(cfg: ModelConfig) -> KVGeometry:
     return KVGeometry(n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head, bytes_per_el=2)
+
+
+def prefix_digest(prefix_tokens: np.ndarray) -> str:
+    """Content address of a prefix: sha256 over its token ids. Identical
+    system prompts — whatever tenant submits them — digest identically, which
+    is what lets the tier store dedupe them to one resident entry."""
+    toks = np.ascontiguousarray(np.asarray(prefix_tokens, dtype=np.int64))
+    return hashlib.sha256(toks.tobytes()).hexdigest()[:16]
 
 
 def build_real_session(
@@ -64,7 +73,8 @@ def build_real_session(
     # retain the raw prefix tokens: the hybrid re-prefill planner recomputes
     # chunk KV from them instead of loading it when IO is the bottleneck
     return PrefixSession(cfg=cfg, prefix_len=n, meta=meta, store=store,
-                         probe=k_all, tokens=np.asarray(prefix_tokens))
+                         probe=k_all, tokens=np.asarray(prefix_tokens),
+                         digest=prefix_digest(prefix_tokens))
 
 
 def build_sim_session(
@@ -74,6 +84,7 @@ def build_sim_session(
     chunk_tokens: int = 16,
     coarse_blocks: bool = False,
     block_tokens: int = 64,
+    digest: Optional[str] = None,
 ) -> PrefixSession:
     geom = _geometry(cfg)
     if coarse_blocks:
@@ -83,7 +94,7 @@ def build_sim_session(
     meta = ChunkMeta(n_tokens=prefix_len,
                      chunk_tokens=block_tokens if coarse_blocks else chunk_tokens)
     return PrefixSession(cfg=cfg, prefix_len=prefix_len, meta=meta,
-                         store=PlanStore(layout), probe=None)
+                         store=PlanStore(layout), probe=None, digest=digest)
 
 
 class SyntheticWorkload:

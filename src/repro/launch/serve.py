@@ -49,6 +49,16 @@ worker channels.  ``--tp-decode K`` (real mode) runs the decode-batch paged
 attention tensor-parallel over the local devices via shard_map
 (``make_sharded_paged_decode``); K > 0 factors the mesh GQA-style into
 (kv=K, rep=n/K), K = 0 uses one flat "model" axis over all devices.
+
+``--cache-tiers HBM:DRAM:SSD`` (unit capacities, contiguous_kv) upgrades the
+shared cache to the content-addressed three-tier
+:class:`repro.storage.tierstore.TieredPrefixStore`: host-DRAM victims demote
+into a log-structured SSD segment tier (and promote back on access) instead
+of dropping, and cache keys become (prefix_digest, layer, unit) so identical
+prompts dedupe to one resident copy.  In sim mode ``--shared-prefix K``
+marks the first K tenants as serving one identical system prompt (one
+digest, one deduped entry, one importance field); the digest prints
+per-tier hit counts, SSD log read amplification and the units dedup saved.
 """
 from __future__ import annotations
 
@@ -66,6 +76,38 @@ from repro.serving import (
     summarize,
 )
 from repro.serving.tenancy import ENGINE_CLASSES, build_sim_fleet
+
+
+def _parse_cache_tiers(spec: str):
+    """"HBM:DRAM:SSD" unit capacities -> (device_cap, host_cap, ssd_cap)."""
+    parts = spec.split(":")
+    if len(parts) != 3:
+        raise SystemExit(f"--cache-tiers wants HBM:DRAM:SSD, got {spec!r}")
+    try:
+        caps = tuple(int(p) for p in parts)
+    except ValueError:
+        raise SystemExit(f"--cache-tiers capacities must be ints: {spec!r}")
+    if caps[0] < 1 or caps[1] < 0 or caps[2] < 0:
+        raise SystemExit(f"--cache-tiers capacities out of range: {spec!r}")
+    return caps
+
+
+def _print_tier_digest(cache):
+    if not hasattr(cache, "ssd"):
+        return
+    h = cache.hits
+    total = sum(h.values()) + cache.misses
+    occ = cache.tier_occupancy()
+    print(f"tier store: hits device={h['device']} host={h['host']} "
+          f"ssd={h['ssd']} misses={cache.misses} "
+          f"(hit rate {100 * (total - cache.misses) / max(total, 1):.1f}%) "
+          f"resident d/h/s={occ['device']}/{occ['host']}/{occ['ssd']}")
+    lay = cache.ssd.layout
+    print(f"ssd log: {lay.live_units()} live units in "
+          f"{len(lay.segments)} segments ({lay.total_bytes/1e6:.2f}MB), "
+          f"read_amp={cache.read_amplification():.3f}, "
+          f"compaction moved {cache.ssd.compaction.units_read} units; "
+          f"dedup saved {cache.dedup_saved_units()} resident units")
 
 
 def _print_replica_digest(sched):
@@ -123,6 +165,17 @@ def _real_main(args):
               hybrid=hybrid)
     if args.system == "contiguous_kv":
         kw.update(budget=args.budget, period=args.period, subperiod=args.subperiod)
+        if args.cache_tiers:
+            from repro.storage.tierstore import TieredPrefixStore
+
+            dcap, hcap, scap = _parse_cache_tiers(args.cache_tiers)
+            kw["cache"] = TieredPrefixStore(
+                dcap, hcap, scap, unit_bytes=sess.store.layout.unit_bytes,
+                payload_mode="memory", unit_shape=sess.store.unit_shape)
+            print(f"tiered prefix store: HBM={dcap} DRAM={hcap} SSD={scap} "
+                  f"units, digest={sess.digest}")
+    elif args.cache_tiers:
+        raise SystemExit("--cache-tiers needs --system contiguous_kv")
     elif args.system != "as_lru":
         kw.update(budget=args.budget)
     tp_mesh = None
@@ -205,6 +258,7 @@ def _real_main(args):
         pools = "host" if args.host_tail_pool else "device"
         print(f"preemptions={s['preemptions']} swaps={s['swaps']} "
               f"swap_bytes={sched.swap_bytes/1e6:.2f}MB ({pools} tail pools)")
+    _print_tier_digest(eng.cache)
     _print_replica_digest(sched)
     _print_handoff_digest(sched)
     if args.decode_tokens == 0:
@@ -217,13 +271,29 @@ def _sim_main(args):
     topology = (DisaggTopology.parse(args.disaggregate)
                 if args.disaggregate else None)
     replicas = ReplicaSet.parse(args.replicas) if args.replicas else None
+    if args.cache_tiers:
+        if args.system != "contiguous_kv":
+            raise SystemExit("--cache-tiers needs --system contiguous_kv")
+        device_cap, host_cap, ssd_cap = _parse_cache_tiers(args.cache_tiers)
+    else:
+        device_cap, host_cap, ssd_cap = args.device_cap, args.host_cap, 0
+    digests = None
+    if args.shared_prefix > 1:
+        # the first K tenants serve one identical system prompt (one content
+        # digest -> one deduped resident copy in a content-addressed store);
+        # the rest each get their own distinct digest
+        k = min(args.shared_prefix, args.tenants)
+        digests = {t: "prompt-shared" for t in range(1, k + 1)}
+        digests.update({t: f"prompt-t{t}" for t in range(k + 1, args.tenants + 1)})
     fleet = build_sim_fleet(args.system, args.model, n_tenants=args.tenants,
                             prefix_len=args.prefix_len, budget=args.budget,
                             period=args.period, subperiod=args.subperiod,
-                            device_cap=args.device_cap, host_cap=args.host_cap,
+                            device_cap=device_cap, host_cap=host_cap,
+                            ssd_cap=ssd_cap,
                             prefill_chunk_tokens=args.prefill_chunk_tokens,
                             hybrid_reprefill=args.hybrid_reprefill,
-                            topology=topology, replicas=replicas)
+                            topology=topology, replicas=replicas,
+                            prefix_digests=digests)
     arrivals = make_arrivals(args.arrival, args.rate, args.requests, seed=0)
     rng = np.random.default_rng(0)
     requests = [
@@ -246,10 +316,13 @@ def _sim_main(args):
     for c in completed:
         tr = c.trace
         dec = (f" tpot={tr.tpot*1e3:6.1f}ms" if tr.decode_times else "")
+        hits = f"hits(d/h)={tr.hits_device}/{tr.hits_host}"
+        if args.cache_tiers:
+            hits = (f"hits(d/h/s)={tr.hits_device}/{tr.hits_host}"
+                    f"/{tr.hits_ssd}")
         print(f"req {c.request.request_id:3d} tenant={c.request.tenant} "
               f"arr={c.request.arrival*1e3:8.1f}ms queue={c.queue_delay*1e3:7.1f}ms "
-              f"ttft={c.ttft*1e3:8.1f}ms hits(d/h)={tr.hits_device}/{tr.hits_host}"
-              f"{dec}")
+              f"ttft={c.ttft*1e3:8.1f}ms {hits}{dec}")
     s = summarize(completed)
     print(f"\n{args.system} tenants={args.tenants} load={args.rate:.1f} req/s "
           f"concurrency={args.concurrency} policy={args.policy}")
@@ -272,12 +345,15 @@ def _sim_main(args):
         avoided = sum(c.trace.ssd_bytes_avoided for c in completed)
         print(f"hybrid re-prefill: {rec_units} units recomputed, "
               f"{avoided/1e6:.2f}MB SSD reads avoided")
+    _print_tier_digest(fleet.cache)
     _print_replica_digest(sched)
     _print_handoff_digest(sched)
     usage = fleet.cache.tenant_usage()
     for tenant in sorted(usage):
         u = usage[tenant]
-        print(f"tenant {tenant}: cache device={u['device']} host={u['host']} units")
+        ssd = f" ssd={u['ssd']}" if "ssd" in u else ""
+        print(f"tenant {tenant}: cache device={u['device']} "
+              f"host={u['host']}{ssd} units")
 
 
 def main():
@@ -348,6 +424,15 @@ def main():
                    choices=("poisson", "burst", "uniform"))
     p.add_argument("--device-cap", type=int, default=256)
     p.add_argument("--host-cap", type=int, default=1024)
+    p.add_argument("--cache-tiers", default=None, metavar="HBM:DRAM:SSD",
+                   help="unit capacities of the three-tier content-addressed "
+                        "prefix store (contiguous_kv; e.g. 256:1024:4096); "
+                        "replaces --device-cap/--host-cap and adds the "
+                        "log-structured SSD tier")
+    p.add_argument("--shared-prefix", type=int, default=0, metavar="K",
+                   help="sim: the first K tenants serve one identical system "
+                        "prompt (one content digest; with --cache-tiers it "
+                        "dedupes to a single resident copy)")
     args = p.parse_args()
     if args.tenants < 1:
         p.error("--tenants must be >= 1")

@@ -11,6 +11,7 @@ occupancy and the cache-aware admission policy can steer warm tenants.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -18,6 +19,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.backends import SimCompute
 from repro.core.cache import AttentionGuidedCache
+from repro.storage.tierstore import TieredPrefixStore
 from repro.core.engine import (
     ASH2OEngine,
     ASLRUEngine,
@@ -72,18 +74,30 @@ def build_sim_fleet(
     subperiod: int = 4,
     device_cap: int = 256,
     host_cap: int = 1024,
+    ssd_cap: int = 0,
     device_model: Optional[DeviceModel] = None,
     seed: int = 0,
     prefill_chunk_tokens: Optional[int] = None,
     hybrid_reprefill: str = "off",
     topology: Optional[DisaggTopology] = None,
     replicas: Optional[ReplicaSet] = None,
+    prefix_digests: Optional[Dict[int, str]] = None,
+    segment_units: int = 64,
 ) -> TenantFleet:
     """Build `n_tenants` engines of one system sharing executor + cache.
 
     Tenant ids are 1..n_tenants (0 is the single-tenant legacy namespace).
     Non-ContiguousKV systems get their own policy class but still share one
     cache *instance* across tenants, so occupancy competition is real.
+
+    ``ssd_cap > 0`` (contiguous_kv only) upgrades the shared cache to the
+    content-addressed three-tier :class:`TieredPrefixStore` — host victims
+    demote into a log-structured SSD segment tier instead of dropping.
+    ``prefix_digests`` maps tenant -> content digest of its prefix: tenants
+    sharing a digest serve the *same* system prompt, so their sessions carry
+    the digest (one deduped resident copy in a content-addressed store) and
+    their workloads draw from one digest-keyed importance field instead of
+    per-tenant fields (identical content attends identically).
     """
     cfg = get_config(model_name)
     executor = ChannelSim(device_model or DeviceModel())
@@ -102,16 +116,31 @@ def build_sim_fleet(
     shared_cache = None
     engines: Dict[int, object] = {}
     workloads: Dict[int, SyntheticWorkload] = {}
+    digests = prefix_digests or {}
     for tenant in range(1, n_tenants + 1):
         coarse = system != "contiguous_kv"
+        digest = digests.get(tenant)
         sess = build_sim_session(cfg, prefix_len, chunk_tokens=chunk_tokens,
-                                 coarse_blocks=coarse, block_tokens=block_tokens)
+                                 coarse_blocks=coarse, block_tokens=block_tokens,
+                                 digest=digest)
         sess = dataclasses.replace(sess, tenant=tenant)
-        wl = SyntheticWorkload(prefix_len, cfg.n_layers, seed=seed + 1000 * tenant)
+        if digest is not None:
+            # identical content attends identically: one importance field per
+            # digest (crc32, not hash(): stable under PYTHONHASHSEED)
+            wl_seed = seed + zlib.crc32(digest.encode()) % 100_000
+        else:
+            wl_seed = seed + 1000 * tenant
+        wl = SyntheticWorkload(prefix_len, cfg.n_layers, seed=wl_seed)
         be = SimCompute(cfg, wl)
         if system == "contiguous_kv":
             if shared_cache is None:
-                shared_cache = AttentionGuidedCache(device_cap, host_cap)
+                if ssd_cap > 0:
+                    shared_cache = TieredPrefixStore(
+                        device_cap, host_cap, ssd_cap,
+                        unit_bytes=sess.store.layout.unit_bytes,
+                        segment_units=segment_units, payload_mode="plan")
+                else:
+                    shared_cache = AttentionGuidedCache(device_cap, host_cap)
             eng = cls(sess, be, executor, cache=shared_cache, budget=budget,
                       period=period, subperiod=subperiod,
                       prefill_chunk_tokens=prefill_chunk_tokens,

@@ -6,6 +6,7 @@ from repro.core.cache import (
     DEVICE,
     HOST,
     AttentionGuidedCache,
+    CachePolicy,
     ImpressScoreCache,
     LFUCache,
     LRUCache,
@@ -150,3 +151,96 @@ class TestContainsIsPureQuery:
         assert c.priority((0, 1)) == 2
         c.lookup((0, 0))  # the control arm: a lookup does bump it
         assert c.priority((0, 0)) == 2
+
+
+class TestMinPriorityRegression:
+    """`_min_priority` must recompute `priority(key)` for the heap head, not
+    trust the priority recorded at push time: after `update_importance`
+    raises a host member's score, the stale pushed value understates the
+    host minimum and demotions get over-admitted."""
+
+    def _raised_host_setup(self):
+        """Host tier {M1, M2} where M1's score was raised AFTER its heap entry
+        was pushed: heap head says 1.0 but the true host minimum is M2's 4.0."""
+        c = AttentionGuidedCache(2, 2)
+        M1, M2 = (0, 101), (0, 102)
+        c.update_importance(M1, 1.0)
+        c.insert(M1)
+        c.update_importance(M2, 4.0)
+        c.insert(M2)
+        for unit, imp in [(103, 20.0), (104, 21.0)]:  # push M1, M2 to host
+            c.update_importance((0, unit), imp)
+            c.insert((0, unit))
+        assert c.tiers[HOST] == {M1, M2}
+        c.update_importance(M1, 9.0)  # M1 now 10.0; its host heap entry says 1.0
+        return c, M1, M2
+
+    def test_min_priority_recomputes_raised_scores(self):
+        c, _, _ = self._raised_host_setup()
+        # pre-fix this returned the stale pushed 1.0 for M1 instead of
+        # settling the head and reporting M2's current 4.0
+        assert c._min_priority(HOST) == pytest.approx(4.0)
+
+    def test_stale_heap_must_not_overadmit_demotions(self):
+        """Demoting a score-4.0 victim into a full host tier whose true
+        minimum is also 4.0 must DROP the victim (admission is strict-`>`);
+        the stale heap head (1.0) made pre-fix code admit it and evict the
+        incumbent M2 instead."""
+        c, M1, M2 = self._raised_host_setup()
+        V = (0, 105)
+        c.update_importance(V, 4.0)
+        c.insert(V)  # device evicts V (4.0 < 20, 21) -> demotion decision
+        assert c.contains(V) is None, "tie with host minimum must not admit"
+        assert c.tiers[HOST] == {M1, M2}, "incumbent evicted on stale minimum"
+
+
+class _ScanAGC(AttentionGuidedCache):
+    """AttentionGuidedCache's S = I x F priority running entirely on the
+    generic base-class O(n)-scan paths (no heaps): the reference semantics
+    the heap fast paths must reproduce exactly."""
+
+    _track = CachePolicy._track
+    _evict_lowest = CachePolicy._evict_lowest
+    _min_priority = CachePolicy._min_priority
+
+
+class TestBaseHeapEquivalence:
+    """The O(n)-scan cascade and the lazy-heap fast paths are the same
+    policy. Pre-unification the base `insert` skipped the recency/frequency
+    touch on a same-tier re-insert (and probed `contains` three times) while
+    the heap subclass touched — identical op sequences now must produce
+    identical tier contents and counters."""
+
+    def test_same_tier_reinsert_is_an_access_in_both(self):
+        for cls in (AttentionGuidedCache, _ScanAGC):
+            c = cls(4, 0)
+            c.insert((0, 1))
+            c.insert((0, 1))
+            assert c.F[(0, 1)] == 2, cls.__name__
+
+    def test_random_sequences_agree(self):
+        rng = np.random.default_rng(0xC04B)
+        for _ in range(20):
+            dev_cap = int(rng.integers(1, 6))
+            host_cap = int(rng.integers(0, 6))
+            heap_c = AttentionGuidedCache(dev_cap, host_cap)
+            scan_c = _ScanAGC(dev_cap, host_cap)
+            for _ in range(150):
+                op = int(rng.integers(0, 3))
+                key = (0, int(rng.integers(0, 12)))
+                if op == 0:
+                    imp = float(rng.random())  # continuous: no score ties
+                    heap_c.update_importance(key, imp)
+                    scan_c.update_importance(key, imp)
+                elif op == 1:
+                    imp = float(rng.random())
+                    heap_c.update_importance(key, imp)
+                    scan_c.update_importance(key, imp)
+                    heap_c.insert(key)
+                    scan_c.insert(key)
+                else:
+                    assert heap_c.lookup(key) == scan_c.lookup(key)
+                assert heap_c.tiers == scan_c.tiers
+            assert heap_c.hits == scan_c.hits
+            assert heap_c.misses == scan_c.misses
+            assert heap_c.tenant_stats == scan_c.tenant_stats

@@ -1,0 +1,127 @@
+"""Property tests: invariants every cache policy must hold under any
+interleaving of inserts, lookups and score updates.
+
+Checked across all four policies (attention-guided, LRU, LFU, IMPRESS) and
+the three-tier TieredPrefixStore:
+
+  1. occupancy: every tier holds at most its capacity;
+  2. exclusivity: a key is resident in at most one tier;
+  3. accounting: per-tenant hit/miss counters sum to the global counters,
+     and (for the tier store) the SSD set mirrors the segment log's index.
+"""
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.cache import (
+    DEVICE,
+    HOST,
+    SSD,
+    AttentionGuidedCache,
+    ImpressScoreCache,
+    LFUCache,
+    LRUCache,
+)
+from repro.storage.tierstore import TieredPrefixStore
+
+POLICIES = [AttentionGuidedCache, LRUCache, LFUCache, ImpressScoreCache]
+
+
+def _mk_tierstore():
+    return TieredPrefixStore(3, 4, 6, unit_bytes=64, segment_units=4)
+
+
+CACHES = POLICIES + [_mk_tierstore]
+
+
+def _build(factory):
+    if factory in POLICIES:
+        return factory(3, 4)
+    return factory()
+
+
+# op = (kind, tenant, unit, score): kind 0=insert 1=lookup 2=update+insert
+OPS = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(1, 3), st.integers(0, 11),
+              st.floats(0.0, 10.0)),
+    min_size=1, max_size=120)
+
+
+def _apply(cache, ops):
+    for kind, tenant, unit, score in ops:
+        key = (tenant, 0, unit)
+        if kind == 2 and hasattr(cache, "update_importance"):
+            cache.update_importance(key, score)
+        if kind == 1:
+            cache.lookup(key, tenant=tenant)
+        else:
+            cache.insert(key, DEVICE, tenant=tenant)
+
+
+def _check_invariants(cache):
+    chain = cache._tier_chain
+    # 1. occupancy bounded per tier
+    for tier in chain:
+        assert len(cache.tiers[tier]) <= cache._capacity(tier), tier
+    # 2. no key resident in two tiers
+    for i, a in enumerate(chain):
+        for b in chain[i + 1:]:
+            dual = cache.tiers[a] & cache.tiers[b]
+            assert not dual, (a, b, dual)
+    # 3. per-tenant stats sum to the global counters
+    for tier in chain:
+        per_tenant = sum(s.get(tier, 0) for s in cache.tenant_stats.values())
+        assert per_tenant == cache.hits[tier], tier
+    assert (sum(s.get("miss", 0) for s in cache.tenant_stats.values())
+            == cache.misses)
+    # tenant_usage rows cover exactly the resident sets
+    usage = cache.tenant_usage()
+    for tier in chain:
+        counted = sum(u[tier] for u in usage.values())
+        # content-addressed keys may be charged to several tenants
+        assert counted >= len(cache.tiers[tier])
+
+
+def _check_tierstore_extras(cache):
+    # the SSD tier's member set mirrors the segment log's live index
+    assert cache.tiers[SSD] == set(cache.ssd.layout.index)
+    # payloads only for resident keys (plan mode: none at all)
+    resident = set().union(*(cache.tiers[t] for t in cache._tier_chain))
+    assert set(cache._payload) <= resident
+
+
+class TestPolicyInvariants:
+    @pytest.mark.parametrize("factory", CACHES,
+                             ids=[getattr(f, "__name__", str(f))
+                                  for f in CACHES])
+    @given(ops=OPS)
+    @settings(max_examples=30, deadline=None)
+    def test_invariants_hold_under_random_ops(self, factory, ops):
+        cache = _build(factory)
+        _apply(cache, ops)
+        _check_invariants(cache)
+        if isinstance(cache, TieredPrefixStore):
+            _check_tierstore_extras(cache)
+
+    @given(ops=OPS)
+    @settings(max_examples=20, deadline=None)
+    def test_shared_digest_invariants(self, ops):
+        """Same stream, but two tenants address one shared digest: dedup
+        must not break occupancy/exclusivity or per-tenant accounting."""
+        cache = _mk_tierstore()
+        for kind, tenant, unit, score in ops:
+            digest = "shared" if tenant in (1, 2) else f"t{tenant}"
+            key = (digest, 0, unit)
+            if kind == 2:
+                cache.update_importance(key, score)
+            if kind == 1:
+                cache.lookup(key, tenant=tenant)
+            else:
+                cache.insert(key, DEVICE, tenant=tenant)
+        _check_invariants(cache)
+        _check_tierstore_extras(cache)
+        # a shared unit is charged once per referencing tenant
+        owners = cache.digest_tenants.get("shared", set())
+        if len(owners) > 1:
+            usage = cache.tenant_usage()
+            rows = [usage.get(t, {}) for t in owners]
+            assert all(r == rows[0] for r in rows[1:])

@@ -57,30 +57,45 @@ class TestLayouts:
 class TestChunkStore:
     def test_roundtrip_file_backed(self, tmp_path):
         lay = ContiguousChunkLayout(80, 3, GEOM, 16)
-        store = ChunkStore(lay, path=str(tmp_path / "kv.bin"))
-        rng = np.random.default_rng(0)
-        k = rng.normal(size=(80, 2, 16)).astype(np.float16)
-        v = rng.normal(size=(80, 2, 16)).astype(np.float16)
-        store.write_layer(1, k, v)
-        got = store.read_units(1, [0, 2, 4])
-        assert set(got) == {0, 2, 4}
-        np.testing.assert_array_equal(got[2][:, 0], k[32:48])
-        np.testing.assert_array_equal(got[2][:, 1], v[32:48])
-        # padding on the tail unit
-        tail = store.read_units(1, [4])[4]
-        assert np.all(np.asarray(tail[0:], np.float32)[80 - 64 :] == 0)
-        store.close()
+        with ChunkStore(lay, path=str(tmp_path / "kv.bin")) as store:
+            rng = np.random.default_rng(0)
+            k = rng.normal(size=(80, 2, 16)).astype(np.float16)
+            v = rng.normal(size=(80, 2, 16)).astype(np.float16)
+            store.write_layer(1, k, v)
+            got = store.read_units(1, [0, 2, 4])
+            assert set(got) == {0, 2, 4}
+            np.testing.assert_array_equal(got[2][:, 0], k[32:48])
+            np.testing.assert_array_equal(got[2][:, 1], v[32:48])
+            # padding on the tail unit
+            tail = store.read_units(1, [4])[4]
+            assert np.all(np.asarray(tail[0:], np.float32)[80 - 64 :] == 0)
 
     def test_stats_and_coalescing(self):
         lay = ContiguousChunkLayout(128, 1, GEOM, 16)
-        store = ChunkStore(lay, in_memory=True)
-        store.write_layer(0, np.zeros((128, 2, 16), np.float16),
-                          np.zeros((128, 2, 16), np.float16))
-        store.read_units(0, [0, 1, 5])
-        assert store.stats.requests == 2  # [0,1] coalesced + [5]
-        assert store.stats.bytes_read == 3 * lay.unit_bytes
-        nbytes, nreq = store.run_plan(0, [2, 3, 4])
-        assert (nbytes, nreq) == (3 * lay.unit_bytes, 1)
+        with ChunkStore(lay, in_memory=True) as store:
+            store.write_layer(0, np.zeros((128, 2, 16), np.float16),
+                              np.zeros((128, 2, 16), np.float16))
+            store.read_units(0, [0, 1, 5])
+            assert store.stats.requests == 2  # [0,1] coalesced + [5]
+            assert store.stats.bytes_read == 3 * lay.unit_bytes
+            nbytes, nreq = store.run_plan(0, [2, 3, 4])
+            assert (nbytes, nreq) == (3 * lay.unit_bytes, 1)
+
+    def test_close_is_idempotent_and_removes_temp_file(self):
+        """Regression: ``close()`` twice used to raise AttributeError on the
+        dead mmap, and the anonymous temp ``.kv`` file outlived the store."""
+        import os
+
+        lay = ContiguousChunkLayout(64, 1, GEOM, 16)
+        store = ChunkStore(lay)  # anonymous temp file
+        path = store.path
+        assert path is not None and os.path.exists(path)
+        store.close()
+        assert not os.path.exists(path)  # temp file reclaimed on first close
+        store.close()  # second close: no AttributeError, no crash
+        with ChunkStore(lay, in_memory=True) as mem_store:
+            pass
+        mem_store.close()  # in-memory store: also safe to double-close
 
 
 class TestSimExecutor:
