@@ -60,6 +60,18 @@ KERNEL_TESTS := tests/test_kernels.py tests/test_tail_pool.py \
 # job via verify-store; ignored by verify-core-tests)
 STORE_TESTS := tests/test_tierstore.py tests/test_cache_props.py
 
+# heterogeneous fleet serving: family-aware step plans (SSM StatePool decode,
+# MoE active-expert weight pricing), mixed-fleet batch purity properties and
+# the per-family c=1 real-mode bit-parity matrix (runs in the
+# serving-regression CI job via verify-fleet; ignored by verify-core-tests);
+# the SelectiveScan kernel suite rides along as the SSM decode inner loop
+FLEET_TESTS := tests/test_fleet.py
+
+# config-zoo smoke matrix (its own CI job via verify-zoo; ignored by
+# verify-core-tests): every config in src/repro/configs/ builds a step plan
+# and survives a sim decode, frontend archs via their embeds path
+ZOO_TESTS := tests/test_zoo.py
+
 # multi-device serving: data-parallel replicas behind one Scheduler, the
 # tensor-parallel paged decode attend (8-virtual-device parity vs the
 # single-device oracle), the serving mesh factory, and the sharded sparse
@@ -70,7 +82,8 @@ SHARDED_TESTS := tests/test_sharded_sparse.py tests/test_sharding_small.py \
 
 .PHONY: verify verify-core verify-core-tests verify-kernels verify-serving \
 	verify-serving-tests verify-hybrid verify-disagg verify-store \
-	verify-sharded test bench-throughput bench-baseline bench-trend
+	verify-fleet verify-zoo verify-sharded test bench-throughput \
+	bench-baseline bench-trend
 
 verify: test bench-throughput
 
@@ -87,6 +100,8 @@ verify-core-tests:
 		$(addprefix --ignore=,$(HYBRID_TESTS)) \
 		$(addprefix --ignore=,$(DISAGG_TESTS)) \
 		$(addprefix --ignore=,$(STORE_TESTS)) \
+		$(addprefix --ignore=,$(FLEET_TESTS)) \
+		$(addprefix --ignore=,$(ZOO_TESTS)) \
 		$(addprefix --ignore=,$(SHARDED_TESTS))
 
 # fast inner loop for kernel / TailPool / DeviceTailPool work
@@ -105,13 +120,24 @@ verify-disagg:
 verify-store:
 	$(PY) -m pytest -q --durations=15 $(STORE_TESTS)
 
+# heterogeneous fleet lane: mixed-fleet suite + the selective_scan kernel
+# trio that backs real-mode SSM decode
+verify-fleet:
+	$(PY) -m pytest -q --durations=15 $(FLEET_TESTS)
+	$(PY) -m pytest -q tests/test_kernels.py -k SelectiveScan
+
+# config-zoo smoke matrix: step plan + sim decode for every registry config
+verify-zoo:
+	$(PY) -m pytest -q --durations=15 $(ZOO_TESTS)
+
 # multi-device lane: 8 forced host devices so the TP parity test, the
 # replica suite and the sharded sparse sweep all see a real mesh
 verify-sharded:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PY) -m pytest -q --durations=15 $(SHARDED_TESTS)
 
-verify-serving: verify-serving-tests verify-hybrid verify-disagg verify-store
+verify-serving: verify-serving-tests verify-hybrid verify-disagg verify-store \
+		verify-fleet
 	$(PY) benchmarks/bench_throughput.py --quick
 
 bench-throughput:

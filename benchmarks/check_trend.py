@@ -49,6 +49,10 @@ DEFAULT_PATTERNS = (
     # deterministic sim: 4-replica weak-scaling throughput ratio (the
     # benchmark asserts >= 2.0; this pins the achieved value)
     "serving/replicas/scaling_ratio",
+    # deterministic sim: heterogeneous dense+SSM+MoE fleet makespan vs the
+    # three families served back-to-back (the benchmark asserts mixed wins;
+    # this pins the achieved overlap harvest)
+    "serving/fleet/mixed_makespan_speedup",
     # deterministic sim: the three-tier content-addressed store's win over
     # the flat two-tier cache on the zipfian multi-tenant trace (the
     # benchmark asserts both > 1; this pins the achieved values)

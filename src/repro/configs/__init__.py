@@ -6,6 +6,7 @@ Sources are cited per entry in each module.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Dict, List
 
 from repro.models.common import ModelConfig
@@ -55,10 +56,23 @@ ASSIGNED: List[str] = [
 ]
 
 
+def resolve_config_name(name: str) -> str:
+    """Registry key for ``name``, tolerating punctuation variants.
+
+    CLI surfaces (``--fleet qwen2_5_7b:2,...``) use underscores where the
+    registry uses dots/dashes; names compare canonically on their
+    alphanumerics (``qwen2_5_7b`` == ``qwen2.5-7b``)."""
+    if name in _REGISTRY:
+        return name
+    canon = re.sub(r"[^a-z0-9]", "", name.lower())
+    for key in _REGISTRY:
+        if re.sub(r"[^a-z0-9]", "", key) == canon:
+            return key
+    raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+
+
 def get_config(name: str) -> ModelConfig:
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
-    return _REGISTRY[name]
+    return _REGISTRY[resolve_config_name(name)]
 
 
 def list_configs() -> List[str]:

@@ -25,7 +25,13 @@ from repro.kernels.decode_attention.ops import (
 from repro.models.common import ModelConfig
 from repro.models.layers import rms_norm, swiglu
 from repro.models.attention import qkv_project
-from repro.models.transformer import _ffn, _logits
+from repro.models.transformer import (
+    _ffn,
+    _logits,
+    decode_step as _t_decode_step,
+    init_serve_state,
+    prefill as _t_prefill,
+)
 
 
 def _slice_layer(params, l: int):
@@ -365,6 +371,59 @@ def stack_tail_pools(pools):
     return k, v, table, lengths
 
 
+class StatePool:
+    """TailPool variant for SSM/hybrid decode: fixed-size recurrent state.
+
+    Instead of a growing paged KV tail, the pool owns one request's whole
+    serve-state pytree from :mod:`repro.models.transformer` — the per-layer
+    fp32 recurrence ``ssm_h`` and the depthwise-conv window ``ssm_conv``
+    (plus the attention KV buffers for hybrid models).  Per-step bytes are
+    *constant*: a decode step rewrites the state in place rather than
+    appending, so ``nbytes`` never grows with the decoded length.
+
+    It speaks the same preemption contract as :class:`DeviceTailPool`:
+    ``swap_out`` snapshots every leaf to host numpy (returning PCIe bytes),
+    ``swap_in`` restores device residency bit-identically, and
+    ``is_device``/``is_resident`` let the scheduler's batch former and
+    preemption paths treat it uniformly with KV pools.
+    """
+
+    __slots__ = ("state", "is_device", "_resident")
+
+    def __init__(self, state: Dict, *, device: bool = True):
+        """``state`` is the serve-state dict returned by
+        ``transformer.prefill`` (keys: length, ssm_h, ssm_conv[, k, v])."""
+        self.state = state
+        self.is_device = device
+        self._resident = device
+
+    @property
+    def nbytes(self) -> int:
+        return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(self.state))
+
+    @property
+    def valid_tokens(self) -> int:
+        return int(self.state["length"])
+
+    @property
+    def is_resident(self) -> bool:
+        return self._resident
+
+    def swap_out(self) -> int:
+        assert self._resident, "state pool already swapped out"
+        self.state = jax.tree_util.tree_map(np.asarray, self.state)
+        self._resident = False
+        return self.nbytes if self.is_device else 0
+
+    def swap_in(self) -> int:
+        assert not self._resident, "state pool is not swapped out"
+        nbytes = self.nbytes
+        if self.is_device:
+            self.state = jax.tree_util.tree_map(jax.device_put, self.state)
+        self._resident = True
+        return nbytes if self.is_device else 0
+
+
 class RealCompute:
     """Tiny-model execution; batch = 1 request.
 
@@ -615,3 +674,105 @@ class SimCompute:
     def decode_mass(self, request_id: int, layer: int, n_units: int) -> np.ndarray:
         """Per-attended-unit attention mass for AGC decode-time updates."""
         return self.workload.chunk_mass(request_id, layer, np.ones(n_units, bool))
+
+
+# ---------------------------------------------------------------------------
+# state-space (SSM / hybrid) backend
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("cfg",))
+def _state_prefill(params, tokens, cfg: ModelConfig, state):
+    return _t_prefill(params, {"tokens": tokens}, cfg, state)
+
+
+@partial(jax.jit, static_argnames=("cfg", "ssm_kernel"))
+def _state_decode(params, token, cfg: ModelConfig, state, ssm_kernel: bool):
+    return _t_decode_step(params, token, cfg, state, ssm_kernel=ssm_kernel)
+
+
+def _stack_states(states):
+    """Stack per-request serve states along the batch axis (axis 1 of every
+    array leaf; ``length`` is a shared scalar and must already agree)."""
+    out = {}
+    for key in states[0]:
+        if key == "length":
+            out[key] = states[0][key]
+        else:
+            out[key] = jnp.concatenate([st[key] for st in states], axis=1)
+    return out
+
+
+class StateCompute:
+    """Real whole-model backend for the SSM/hybrid families.
+
+    :class:`RealCompute` decomposes attention models into part-A/part-B
+    passes around a paged KV pool; the state-space families instead run the
+    stacked serve path of :mod:`repro.models.transformer` directly —
+    ``prefill`` fills a fixed-size serve-state pytree (per-layer fp32
+    recurrence + conv window, plus attention KV for hybrid) wrapped in a
+    :class:`StatePool`, and each ``decode_step`` rewrites that state in
+    place through the fused ``kernels.selective_scan`` Pallas path
+    (``ssm_kernel=True``, the default; the inline XLA recurrence is the
+    oracle).  ``decode_step_batch`` is the fleet batching surface: members
+    whose states share one geometry and length stack along the batch axis
+    and run as a single kernel pass."""
+
+    def __init__(self, cfg: ModelConfig, params, *, device: bool = True,
+                 ssm_kernel: bool = True):
+        assert cfg.family in ("ssm", "hybrid"), (
+            "StateCompute serves the state-space families; use RealCompute "
+            "for attention models")
+        self.cfg = cfg
+        self.params = params
+        self.device = device
+        self.ssm_kernel = ssm_kernel
+
+    def new_request(self, request_id: int):
+        """Interface parity with RealCompute (stateless between requests)."""
+
+    def prefill(self, tokens, extra_tokens: int = 0):
+        """Run the whole prompt; returns (first-token logits, StatePool).
+
+        ``extra_tokens`` preallocates decode capacity in the hybrid KV
+        buffers (pure SSM state is length-independent either way)."""
+        tokens = np.asarray(tokens, np.int32)[None]  # (1, s)
+        state = init_serve_state(self.cfg, 1,
+                                 tokens.shape[1] + int(extra_tokens))
+        logits, state = _state_prefill(self.params, jnp.asarray(tokens),
+                                       self.cfg, state)
+        return np.asarray(logits), StatePool(state, device=self.device)
+
+    def decode_step(self, token: int, state):
+        """One greedy decode position; returns (logits, new_state)."""
+        tok = jnp.asarray(np.array([[token]], np.int32))
+        logits, new_state = _state_decode(self.params, tok, self.cfg, state,
+                                          self.ssm_kernel)
+        return np.asarray(logits), new_state
+
+    def decode_step_batch(self, ctxs):
+        """One batched decode pass over `ctxs`' StatePools.
+
+        States that share a tree structure, leaf shapes and length stack
+        along the batch axis into a single ``decode_step``; a ragged batch
+        falls back to per-request steps (still one scheduler iteration).
+        Each member's pool is updated in place; returns per-ctx logits."""
+        states = [c.pools[0].state for c in ctxs]
+        lengths = {int(np.asarray(st["length"])) for st in states}
+        shapes = {tuple((k, tuple(v.shape)) for k, v in sorted(st.items())
+                  if k != "length") for st in states}
+        if len(lengths) > 1 or len(shapes) > 1:
+            outs = []
+            for c in ctxs:
+                logits, new_state = self.decode_step(c.token, c.pools[0].state)
+                c.pools[0].state = new_state
+                outs.append(logits)
+            return outs
+        batched = _stack_states(states)
+        toks = jnp.asarray(np.array([[c.token] for c in ctxs], np.int32))
+        logits, new_batched = _state_decode(self.params, toks, self.cfg,
+                                            batched, self.ssm_kernel)
+        logits = np.asarray(logits)
+        for i, c in enumerate(ctxs):
+            c.pools[0].state = {
+                k: (v if k == "length" else v[:, i: i + 1])
+                for k, v in new_batched.items()}
+        return [logits[i: i + 1] for i in range(len(ctxs))]

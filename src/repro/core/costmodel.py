@@ -16,15 +16,45 @@ class LayerCost:
     hbm_bytes: float
 
 
+def ssm_layer_weights(cfg: ModelConfig) -> int:
+    """Parameter count of one layer's mamba mixer (in/out projections, the
+    depthwise conv, x-projection and the per-channel scan parameters)."""
+    d, d_in, n, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return (d * 2 * d_in            # in_proj -> (x, z)
+            + k * d_in + d_in       # depthwise conv + bias
+            + d_in * (2 * n + 1)    # x_proj -> (B, C, dt)
+            + d_in * n + 2 * d_in   # A_log, D, dt_bias-ish
+            + d_in * d)             # out_proj
+
+
 def layer_weight_bytes(cfg: ModelConfig, bytes_per_el: int = 2) -> int:
+    """Weight bytes streamed from HBM by one token batch through one layer.
+
+    Family-aware: an MoE layer streams the router plus only the ``top_k``
+    *active* experts' FFN weights (not the full expert stack); an SSM layer
+    streams the mamba mixer parameters instead of attention projections; a
+    hybrid layer streams both its attention half and its mamba mixer."""
     per_layer = cfg.d_model * cfg.attn_dim + 2 * cfg.d_model * cfg.kv_dim
     per_layer += cfg.attn_dim * cfg.d_model
     if cfg.family == "moe":
-        # only active experts' weights stream from HBM per token batch
+        # router + only the active experts' weights stream per token batch
+        per_layer += cfg.d_model * cfg.n_experts
         per_layer += cfg.top_k * 3 * cfg.d_model * cfg.moe_d_ff
     else:
         per_layer += 3 * cfg.d_model * cfg.d_ff
+    if cfg.family in ("ssm", "hybrid"):
+        per_layer += ssm_layer_weights(cfg)
     return per_layer * bytes_per_el
+
+
+def ssm_state_bytes(cfg: ModelConfig) -> int:
+    """Per-layer recurrent-state bytes of an SSM/hybrid layer: the fp32
+    recurrence h (d_inner, ssm_state) plus the (ssm_conv - 1, d_inner)
+    activation-dtype conv window.  Constant — decode never grows it."""
+    if not cfg.ssm_state:
+        return 0
+    return (cfg.d_inner * cfg.ssm_state * 4
+            + (cfg.ssm_conv - 1) * cfg.d_inner * 2)
 
 
 def suffix_layer_cost(cfg: ModelConfig, suffix_len: int, attended_tokens: int) -> LayerCost:
@@ -116,6 +146,51 @@ def decode_weight_bytes(cfg: ModelConfig) -> float:
     requests' tokens are in the batch."""
     return float(cfg.n_layers * layer_weight_bytes(cfg)
                  + cfg.d_model * cfg.vocab_size * 2)
+
+
+def ssm_decode_cost(cfg: ModelConfig, attended_per_layer=None) -> LayerCost:
+    """One SSM/hybrid decode position across all layers + the LM head.
+
+    Pure SSM layers touch a *constant* footprint per step: the mixer weights
+    plus the fixed-size recurrence state (``ssm_state_bytes``) — no KV read
+    that grows with the decoded length.  Hybrid layers additionally pay the
+    attention-side decode cost over ``attended_per_layer``."""
+    d, d_in, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    mixer_flops = 2.0 * (d * 2 * d_in              # in_proj
+                         + cfg.ssm_conv * d_in     # depthwise conv window
+                         + d_in * (2 * n + 1)      # x_proj
+                         + 3 * d_in * n            # dA*h + dB*x, C readout
+                         + d_in * d)               # out_proj
+    flops = cfg.n_layers * mixer_flops
+    hbm = cfg.n_layers * float(layer_weight_bytes(cfg) + ssm_state_bytes(cfg))
+    if cfg.family == "hybrid" and attended_per_layer is not None:
+        for m in attended_per_layer:
+            attn = 2 * 2 * 1 * int(m) * cfg.n_heads * cfg.d_head
+            flops += attn
+            hbm += 2 * int(m) * cfg.kv_dim * 2
+    flops += 2.0 * cfg.d_model * cfg.vocab_size
+    hbm += cfg.d_model * cfg.vocab_size * 2
+    return LayerCost(flops=float(flops), hbm_bytes=float(hbm))
+
+
+def ssm_prefill_cost(cfg: ModelConfig, chunk_len: int,
+                     attended_tokens: int = 0) -> LayerCost:
+    """One prefill chunk of ``chunk_len`` tokens through all layers of an
+    SSM/hybrid model.  The scan is linear in the chunk length (no quadratic
+    attention term for pure SSM); hybrid adds attention over
+    ``attended_tokens``."""
+    d, d_in, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    s = chunk_len
+    mixer_flops = 2.0 * s * (d * 2 * d_in + cfg.ssm_conv * d_in
+                             + d_in * (2 * n + 1) + 3 * d_in * n + d_in * d)
+    flops = cfg.n_layers * mixer_flops
+    hbm = cfg.n_layers * float(layer_weight_bytes(cfg) + ssm_state_bytes(cfg))
+    if cfg.family == "hybrid":
+        for _ in range(cfg.n_layers):
+            flops += 2 * 2 * s * max(attended_tokens, s) * cfg.n_heads * cfg.d_head
+            hbm += 2 * max(attended_tokens, s) * cfg.kv_dim * 2
+    flops += 2.0 * s * cfg.d_model  # embedding
+    return LayerCost(flops=float(flops), hbm_bytes=float(hbm))
 
 
 def decode_step_cost(cfg: ModelConfig, attended_per_layer) -> LayerCost:

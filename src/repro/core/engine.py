@@ -201,6 +201,10 @@ class _EngineBase:
         self.cfg = session.cfg
         self.sim = isinstance(executor, ChannelSim)
         self.tenant = session.tenant
+        # the model's weight-stream namespace: every ComputeOp's weight_key
+        # is suffixed "@<stream>" so a heterogeneous fleet's batch former
+        # never amortizes weight bytes across different models' ops
+        self.stream = self.cfg.name
         # content-addressed keys only when both ends opt in: the session
         # carries a prefix digest AND the store dedupes across tenants
         # (flat caches keep tenant-namespaced keys — the control arm)
@@ -516,7 +520,7 @@ class _EngineBase:
         yield ComputeOp(self._bound(request_id, fn) if fn is not None else None,
                         flops=cost.flops, hbm_bytes=cost.hbm_bytes,
                         tag="recompute", phase="prefill", tokens=end,
-                        weight_bytes=wb, weight_key="model")
+                        weight_bytes=wb, weight_key=f"model@{self.stream}")
         # recomputed KV occupies the same pool pages loaded KV would: ready
         # handles + DEVICE-tier cache entries for every layer's head units
         for u in d.recompute_units:
@@ -599,7 +603,7 @@ class _EngineBase:
                                   flops=cost.flops, hbm_bytes=cost.hbm_bytes,
                                   tag=tag, phase="prefill", tokens=n_tok,
                                   weight_bytes=wb,
-                                  weight_key=f"layer:{layer}",
+                                  weight_key=f"layer:{layer}@{self.stream}",
                                   batch_ctx=ctx if final else None)
         return out
 
@@ -758,7 +762,8 @@ class _EngineBase:
                                   flops=cost.flops, hbm_bytes=cost.hbm_bytes,
                                   tag="decode", phase="decode",
                                   weight_bytes=weight_bytes, tokens=1,
-                                  weight_key="model", batch_ctx=ctx)
+                                  weight_key=f"model@{self.stream}",
+                                  batch_ctx=ctx)
             masses = None
             if out is not None:
                 logits, masses = out
@@ -1137,3 +1142,158 @@ class IMPRESSEngine(_BlockBaselineEngine):
                          ImpressScoreCache(device_cap, host_cap), budget=budget,
                          prefill_chunk_tokens=prefill_chunk_tokens,
                          device_tail_pool=device_tail_pool, hybrid=hybrid)
+
+
+# ---------------------------------------------------------------------------
+# state-space / hybrid families
+# ---------------------------------------------------------------------------
+class StateSpaceEngine:
+    """Family-aware step-plan factory for the SSM (falcon-mamba) and hybrid
+    (hymba) families — the heterogeneous-fleet counterpart of the KV engines.
+
+    There is no granular prefix KV to identify/load, so the plan has no I/O
+    legs: prefill is a linear scan over the whole prompt emitted as
+    chunk-granular batchable ComputeOps (priced by
+    :func:`costmodel.ssm_prefill_cost` in sim mode, running
+    ``StateCompute.prefill`` on the final chunk in real mode), and each
+    decode step carries the family's true shape — *constant* per-step bytes
+    via :func:`costmodel.ssm_decode_cost` (the fixed recurrent state instead
+    of a growing KV read; hybrids add their attention span) and a
+    :class:`repro.core.backends.StatePool` as the real-mode batching /
+    preemption surface.  Every op's ``weight_key`` is namespaced
+    ``"model@<cfg.name>"`` so a mixed fleet's batch former never amortizes
+    this model's weight stream against another family's ops.
+
+    The scheduler's swap/handoff pricing delegates to the
+    :meth:`swap_bytes_of` / :meth:`handoff_payload` hooks (the KV engines'
+    resident-unit accounting does not apply here)."""
+
+    name = "state_space"
+    hybrid = None  # no compute-or-load planner: there is no stored KV to load
+    cache = None  # no prefix-unit cache; the prefill scan is always compute
+
+    def __init__(self, cfg, backend, executor, *, prefix_tokens=None,
+                 prefix_len: int = 0, tenant: int = 0,
+                 prefill_chunk_tokens: Optional[int] = None):
+        assert cfg.family in ("ssm", "hybrid"), (
+            f"StateSpaceEngine serves ssm/hybrid, not {cfg.family!r}")
+        self.cfg = cfg
+        self.backend = backend
+        self.ex = executor
+        self.sim = isinstance(executor, ChannelSim)
+        self.tenant = tenant
+        self.stream = cfg.name
+        if prefix_tokens is not None:
+            prefix_tokens = np.asarray(prefix_tokens, dtype=np.int32)
+            prefix_len = len(prefix_tokens)
+        self.prefix_tokens = prefix_tokens
+        self.prefix_len = int(prefix_len)
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+
+    # -- plan entry points (same contract as _EngineBase) ---------------------
+    def plan(self, suffix_tokens, request_id: int = 0,
+             arrival: float = 0.0, decode_tokens: int = 0) -> StepPlan:
+        clock = RequestClock(arrival)
+        trace = ReprefillTrace(system=self.name)
+        gen = self._steps(np.asarray(suffix_tokens), request_id, clock, trace,
+                          decode_tokens=decode_tokens)
+        return StepPlan(request_id=request_id, gen=gen, clock=clock,
+                        trace=trace)
+
+    def reprefill(self, suffix_tokens, request_id: int = 0,
+                  decode_tokens: int = 0):
+        p = self.plan(suffix_tokens, request_id, decode_tokens=decode_tokens)
+        logits = drive_serial(self.ex, p)
+        return logits, p.trace
+
+    # -- scheduler pricing hooks ----------------------------------------------
+    def _state_bytes(self, suffix_len: int, decoded: int) -> int:
+        """Bytes a swap/handoff of one request's live state must move: the
+        constant per-layer recurrent state, plus the attention KV written so
+        far for hybrid models."""
+        cfg = self.cfg
+        n = cfg.n_layers * CM.ssm_state_bytes(cfg)
+        if cfg.family == "hybrid":
+            tokens = self.prefix_len + suffix_len + decoded
+            n += tokens * CM.token_kv_bytes(cfg) * cfg.n_layers
+        return int(n)
+
+    def swap_bytes_of(self, a) -> int:
+        return self._state_bytes(len(a.request.suffix),
+                                 len(a.plan.trace.decode_times))
+
+    def handoff_payload(self, a):
+        """(bytes, tokens) a prefill->decode handoff must move/recompute."""
+        suffix_len = len(a.request.suffix)
+        nbytes = self._state_bytes(suffix_len, len(a.plan.trace.decode_times))
+        return nbytes, self.prefix_len + suffix_len
+
+    # -- the plan -------------------------------------------------------------
+    def _steps(self, suffix_tokens, request_id, clock, trace, decode_tokens=0):
+        cfg, be = self.cfg, self.backend
+        if hasattr(be, "new_request"):
+            be.new_request(request_id)
+        s = len(suffix_tokens)
+        t_start = clock.t
+        total = self.prefix_len + s
+        wb = float(CM.decode_weight_bytes(cfg))
+        chunk = self.prefill_chunk_tokens or total
+        logits, pool = None, None
+        done = 0
+        while done < total:
+            n_tok = min(chunk, total - done)
+            done += n_tok
+            final = done >= total
+            cost = CM.ssm_prefill_cost(cfg, n_tok, attended_tokens=done)
+            fn = None
+            if final and not self.sim:
+
+                def fn(suffix=suffix_tokens, extra=decode_tokens):
+                    toks = (np.concatenate([self.prefix_tokens, suffix])
+                            if self.prefix_len else np.asarray(suffix))
+                    return be.prefill(toks, extra_tokens=extra + 1)
+
+            out = yield ComputeOp(fn, flops=cost.flops,
+                                  hbm_bytes=cost.hbm_bytes, tag="ssm_prefill",
+                                  phase="prefill", tokens=n_tok,
+                                  weight_bytes=wb,
+                                  weight_key=f"model@{self.stream}")
+            if out is not None:
+                logits, pool = out
+        trace.add_stage("ssm_prefill", clock.t - t_start)
+        trace.ttft = clock.t - t_start
+        if decode_tokens <= 0:
+            return logits
+        trace.first_token_at = clock.t
+        tok = int(np.argmax(logits[0, -1])) if logits is not None else 0
+        for step in range(decode_tokens):
+            attended = None
+            if cfg.family == "hybrid":
+                attended = [total + step + 1] * cfg.n_layers
+            cost = CM.ssm_decode_cost(cfg, attended)
+            ctx, fn = None, None
+            if not self.sim:
+                pos = total + step
+                ctx = DecodeBatchCtx(backend=be, token=tok, pos=pos,
+                                     pools={0: pool})
+
+                def fn(ctx=ctx, tok_now=tok):
+                    # the backend comes off the ctx (a disaggregated
+                    # scheduler restamps ctx.backend at the handoff), and
+                    # the state is rewritten in place on the request's pool
+                    bk = ctx.backend
+                    lg, new_state = bk.decode_step(tok_now, ctx.pools[0].state)
+                    ctx.pools[0].state = new_state
+                    return lg
+
+            out = yield ComputeOp(fn, flops=cost.flops,
+                                  hbm_bytes=cost.hbm_bytes, tag="decode",
+                                  phase="decode", weight_bytes=wb, tokens=1,
+                                  weight_key=f"model@{self.stream}",
+                                  batch_ctx=ctx)
+            if out is not None:
+                logits = out
+                tok = int(np.argmax(logits[0, -1]))
+                trace.decode_tokens_out.append(tok)
+            trace.decode_times.append(clock.t)
+        return logits

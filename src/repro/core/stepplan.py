@@ -71,9 +71,14 @@ class ComputeOp:
 
     ``weight_key`` names the weight stream ``weight_bytes`` refers to:
     ``"model"`` for decode steps (every layer + LM head) and ``"layer:<l>"``
-    for a single layer's prefill chunk.  Two ops share a weight stream only
-    if their keys match or one of them streams the whole model — a batch of
-    chunks from *different* layers must not pretend to share weights.
+    for a single layer's prefill chunk.  In a heterogeneous fleet the key is
+    additionally namespaced per model — ``"model@<cfg.name>"`` /
+    ``"layer:<l>@<cfg.name>"`` — because two different models never share
+    weights: the batch former only amortizes ``weight_bytes`` across ops of
+    the *same* stream (see :func:`weight_stream`).  Two ops share a weight
+    stream only if their keys match or one of them streams the whole model
+    *of the same family* — a batch of chunks from *different* layers (or
+    different models) must not pretend to share weights.
 
     Hybrid re-prefill stamps recompute ops with ``tag="recompute"``,
     ``phase="prefill"`` and ``weight_key="model"`` (a truncated causal
@@ -162,6 +167,15 @@ class WaitOp:
 
     handle: IOHandle
     tag: str = ""
+
+
+def weight_stream(weight_key: str) -> str:
+    """The model namespace of a ``weight_key``: the part after the last
+    ``"@"``, or ``""`` for un-namespaced (single-model) keys.  Ops whose
+    streams differ belong to different models and must never pretend to
+    share a weight read, no matter how their base keys compare."""
+    _, sep, stream = weight_key.rpartition("@")
+    return stream if sep else ""
 
 
 Op = object  # ComputeOp | WaitOp

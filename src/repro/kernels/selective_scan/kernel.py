@@ -20,13 +20,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _scan_kernel(x_ref, dt_ref, B_ref, C_ref, A_ref, y_ref, hout_ref,
+def _scan_kernel(x_ref, dt_ref, B_ref, C_ref, A_ref, h0_ref, y_ref, hout_ref,
                  h_scr, *, block_s: int, n_s_blocks: int):
     si = pl.program_id(2)
 
     @pl.when(si == 0)
     def _init():
-        h_scr[...] = jnp.zeros_like(h_scr)
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
 
     x = x_ref[0].astype(jnp.float32)  # (block_s, d_blk)
     dt = dt_ref[0].astype(jnp.float32)  # (block_s, 1)
@@ -58,12 +58,16 @@ def selective_scan(
     A: jax.Array,  # (d_in, n)
     B: jax.Array,  # (b, s, n)
     C: jax.Array,  # (b, s, n)
+    h0: jax.Array | None = None,  # (b, d_in, n) initial recurrent state
     *,
     block_s: int = 128,
     block_d: int = 512,
     interpret: bool = False,
 ):
-    """Returns (y (b, s, d_in) fp32, h_final (b, d_in, n) fp32)."""
+    """Returns (y (b, s, d_in) fp32, h_final (b, d_in, n) fp32).
+
+    `h0` seeds the VMEM-resident state at the first sequence block (decode
+    resumes the recurrence mid-stream); None starts from zeros."""
     b, s, d_in = x.shape
     n = A.shape[1]
     block_s = min(block_s, s)
@@ -71,6 +75,8 @@ def selective_scan(
     assert s % block_s == 0 and d_in % block_d == 0
     n_s = s // block_s
     n_d = d_in // block_d
+    if h0 is None:
+        h0 = jnp.zeros((b, d_in, n), jnp.float32)
 
     kernel = functools.partial(_scan_kernel, block_s=block_s, n_s_blocks=n_s)
     y, h_final = pl.pallas_call(
@@ -82,6 +88,7 @@ def selective_scan(
             pl.BlockSpec((1, block_s, n), lambda bi, di, si: (bi, si, 0)),
             pl.BlockSpec((1, block_s, n), lambda bi, di, si: (bi, si, 0)),
             pl.BlockSpec((block_d, n), lambda bi, di, si: (di, 0)),
+            pl.BlockSpec((1, block_d, n), lambda bi, di, si: (bi, di, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, block_s, block_d), lambda bi, di, si: (bi, si, di)),
@@ -93,5 +100,5 @@ def selective_scan(
         ],
         scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
         interpret=interpret,
-    )(x, dt[..., None], B, C, A)
+    )(x, dt[..., None], B, C, A, h0)
     return y, h_final

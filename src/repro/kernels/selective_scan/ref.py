@@ -11,9 +11,11 @@ def selective_scan_ref(
     A: jax.Array,  # (d_in, n) negative-definite diagonal
     B: jax.Array,  # (b, s, n)
     C: jax.Array,  # (b, s, n)
+    h0: jax.Array | None = None,  # (b, d_in, n) initial recurrent state
 ):
     """y[t] = C[t] . h[t],  h[t] = exp(dt[t] A) h[t-1] + dt[t] B[t] x[t].
 
+    `h0` seeds the recurrence (decode resumes mid-stream); None means zeros.
     Returns (y (b, s, d_in) fp32, h_final (b, d_in, n) fp32).
     """
     b, s, d_in = x.shape
@@ -26,7 +28,10 @@ def selective_scan_ref(
         y = jnp.einsum("bdn,bn->bd", h, C_t)
         return h, y
 
-    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
     xs = (
         x.astype(jnp.float32).transpose(1, 0, 2),
         dt.astype(jnp.float32).transpose(1, 0),

@@ -50,6 +50,19 @@ attention tensor-parallel over the local devices via shard_map
 (``make_sharded_paged_decode``); K > 0 factors the mesh GQA-style into
 (kv=K, rep=n/K), K = 0 uses one flat "model" axis over all devices.
 
+``--fleet model:count,model:count`` serves a *heterogeneous* fleet behind the
+one Scheduler — e.g. ``--fleet qwen2_5_7b:2,falcon_mamba_7b:1,
+granite_moe_3b_a800m:1`` mixes dense, SSM and MoE tenants.  Attention-family
+tenants keep the requested ``--system`` KV engine; ssm/hybrid tenants get the
+family-aware :class:`repro.core.engine.StateSpaceEngine` (constant per-step
+decode bytes over a recurrent StatePool instead of a growing KV tail).  Every
+op's weight stream is namespaced per model, so iterations interleave across
+families but a batch never amortizes one model's weights against another's.
+Sim mode composes with ``--replicas``/``--disaggregate``; real mode builds
+one tiny real backend per tenant model (``--fleet`` with real-mode
+``--replicas``/``--disaggregate`` is rejected — per-model worker backends
+are not wired yet).
+
 ``--cache-tiers HBM:DRAM:SSD`` (unit capacities, contiguous_kv) upgrades the
 shared cache to the content-addressed three-tier
 :class:`repro.storage.tierstore.TieredPrefixStore`: host-DRAM victims demote
@@ -75,7 +88,11 @@ from repro.serving import (
     make_arrivals,
     summarize,
 )
-from repro.serving.tenancy import ENGINE_CLASSES, build_sim_fleet
+from repro.serving.tenancy import (
+    ENGINE_CLASSES,
+    build_sim_fleet,
+    parse_fleet_spec,
+)
 
 
 def _parse_cache_tiers(spec: str):
@@ -267,6 +284,101 @@ def _real_main(args):
               f"{correct}/{len(task.queries)}")
 
 
+def _real_fleet_main(args):
+    """Real-mode heterogeneous fleet: one tiny real backend per tenant model,
+    every family iteration-batched behind the one wall-clock Scheduler."""
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.core import build_real_session
+    from repro.core.backends import RealCompute, StateCompute
+    from repro.core.engine import StateSpaceEngine
+    from repro.data.synthetic import make_task
+    from repro.models import transformer as T
+    from repro.storage.timing import RealExecutor
+
+    if args.disaggregate or args.replicas or args.tp_decode is not None:
+        raise SystemExit("--fleet in real mode does not compose with "
+                         "--disaggregate/--replicas/--tp-decode (per-model "
+                         "worker backends are not wired); use --mode sim")
+    entries = parse_fleet_spec(args.fleet)
+    ex = RealExecutor()
+    engines, cfgs = {}, {}
+    tenant = 0
+    task = None
+    for name, count in entries:
+        cfg = reduced_config(name)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        if task is None:
+            # one synthetic task: every reduced config shares a vocab, so
+            # the fleet serves the same prompt/query stream
+            task = make_task(args.dataset, cfg.vocab_size,
+                             n_queries=args.requests)
+            print(f"ingesting shared prefix: {len(task.prefix)} tokens "
+                  f"({args.dataset})")
+        for _ in range(count):
+            tenant += 1
+            cfgs[tenant] = cfg
+            if cfg.family in ("ssm", "hybrid"):
+                engines[tenant] = StateSpaceEngine(
+                    cfg, StateCompute(cfg, params), ex,
+                    prefix_tokens=task.prefix, tenant=tenant,
+                    prefill_chunk_tokens=args.prefill_chunk_tokens)
+                continue
+            coarse = args.system != "contiguous_kv"
+            sess = build_real_session(cfg, params, task.prefix,
+                                      chunk_tokens=args.chunk_tokens,
+                                      coarse_blocks=coarse, in_memory=True)
+            import dataclasses as _dc
+
+            sess = _dc.replace(sess, tenant=tenant)
+            kw = dict(device_cap=64, host_cap=128,
+                      prefill_chunk_tokens=args.prefill_chunk_tokens,
+                      device_tail_pool=not args.host_tail_pool)
+            if args.system == "contiguous_kv":
+                kw.update(budget=args.budget, period=args.period,
+                          subperiod=args.subperiod)
+            elif args.system != "as_lru":
+                kw.update(budget=args.budget)
+            engines[tenant] = ENGINE_CLASSES[args.system](
+                sess, RealCompute(cfg, params), ex, **kw)
+    roster = ", ".join(f"t{t}={c.name}[{c.family}]"
+                       for t, c in sorted(cfgs.items()))
+    print(f"heterogeneous fleet: {roster}")
+    requests = [Request(request_id=rid, suffix=suffix,
+                        tenant=1 + rid % len(engines),
+                        decode_tokens=args.decode_tokens,
+                        ttft_target=args.ttft_slo)
+                for rid, (suffix, _) in enumerate(task.queries)]
+    sched = Scheduler(engines, policy=args.policy,
+                      max_concurrency=args.concurrency,
+                      batch_decode=not args.no_batch_decode,
+                      max_batch_tokens=args.max_batch_tokens,
+                      preempt=args.preempt,
+                      swap_on_preempt=args.swap_on_preempt,
+                      prefill_estimate=args.prefill_estimate)
+    completed = sched.run(requests)
+    for c in completed:
+        tr = c.trace
+        dec = (f" tpot={tr.tpot*1e3:6.1f}ms ({tr.n_decoded} tok)"
+               if tr.decode_times else "")
+        print(f"req {c.request.request_id:2d} "
+              f"{cfgs[c.request.tenant].name:>24s}: "
+              f"ttft={c.ttft*1e3:7.1f}ms{dec}")
+    s = summarize(completed)
+    print(f"concurrency={args.concurrency} policy={args.policy} "
+          f"p50={s['p50_ttft']*1e3:.1f}ms p95={s['p95_ttft']*1e3:.1f}ms "
+          f"goodput={s['goodput_rps']:.2f} req/s")
+    if "mean_tpot" in s:
+        print(f"decode: mean TPOT={s['mean_tpot']*1e3:.1f}ms "
+              f"ITL p95={s['p95_itl']*1e3:.1f}ms "
+              f"{s['decode_tok_rate']:.1f} tok/s")
+    if sched.real_batch_log:
+        sizes = [len(b) for b in sched.real_batch_log]
+        print(f"batched iterations: {len(sizes)} "
+              f"(mean b={np.mean(sizes):.2f}, max b={max(sizes)})")
+
+
 def _sim_main(args):
     topology = (DisaggTopology.parse(args.disaggregate)
                 if args.disaggregate else None)
@@ -293,13 +405,18 @@ def _sim_main(args):
                             prefill_chunk_tokens=args.prefill_chunk_tokens,
                             hybrid_reprefill=args.hybrid_reprefill,
                             topology=topology, replicas=replicas,
-                            prefix_digests=digests)
+                            prefix_digests=digests, fleet=args.fleet)
+    n_tenants = len(fleet.engines)
+    if args.fleet:
+        roster = ", ".join(f"t{t}={cfg.name}[{cfg.family}]"
+                           for t, cfg in sorted(fleet.configs.items()))
+        print(f"heterogeneous fleet: {roster}")
     arrivals = make_arrivals(args.arrival, args.rate, args.requests, seed=0)
     rng = np.random.default_rng(0)
     requests = [
         Request(request_id=i, suffix=rng.integers(0, 1000, 64),
                 arrival=float(arrivals[i]),
-                tenant=1 + i % args.tenants,
+                tenant=1 + i % n_tenants,
                 decode_tokens=args.decode_tokens,
                 ttft_target=args.ttft_slo)
         for i in range(args.requests)
@@ -324,7 +441,7 @@ def _sim_main(args):
               f"arr={c.request.arrival*1e3:8.1f}ms queue={c.queue_delay*1e3:7.1f}ms "
               f"ttft={c.ttft*1e3:8.1f}ms {hits}{dec}")
     s = summarize(completed)
-    print(f"\n{args.system} tenants={args.tenants} load={args.rate:.1f} req/s "
+    print(f"\n{args.system} tenants={n_tenants} load={args.rate:.1f} req/s "
           f"concurrency={args.concurrency} policy={args.policy}")
     print(f"p50={s['p50_ttft']*1e3:.1f}ms p95={s['p95_ttft']*1e3:.1f}ms "
           f"goodput={s['goodput_rps']:.2f} req/s "
@@ -345,15 +462,17 @@ def _sim_main(args):
         avoided = sum(c.trace.ssd_bytes_avoided for c in completed)
         print(f"hybrid re-prefill: {rec_units} units recomputed, "
               f"{avoided/1e6:.2f}MB SSD reads avoided")
-    _print_tier_digest(fleet.cache)
+    if fleet.cache is not None:  # None: an all-SSM fleet has no KV cache
+        _print_tier_digest(fleet.cache)
     _print_replica_digest(sched)
     _print_handoff_digest(sched)
-    usage = fleet.cache.tenant_usage()
-    for tenant in sorted(usage):
-        u = usage[tenant]
-        ssd = f" ssd={u['ssd']}" if "ssd" in u else ""
-        print(f"tenant {tenant}: cache device={u['device']} "
-              f"host={u['host']}{ssd} units")
+    if fleet.cache is not None:
+        usage = fleet.cache.tenant_usage()
+        for tenant in sorted(usage):
+            u = usage[tenant]
+            ssd = f" ssd={u['ssd']}" if "ssd" in u else ""
+            print(f"tenant {tenant}: cache device={u['device']} "
+                  f"host={u['host']}{ssd} units")
 
 
 def main():
@@ -429,6 +548,13 @@ def main():
                         "prefix store (contiguous_kv; e.g. 256:1024:4096); "
                         "replaces --device-cap/--host-cap and adds the "
                         "log-structured SSD tier")
+    p.add_argument("--fleet", default=None, metavar="MODEL:N,MODEL:N",
+                   help="heterogeneous fleet spec, e.g. qwen2_5_7b:2,"
+                        "falcon_mamba_7b:1,granite_moe_3b_a800m:1 — "
+                        "per-model engines (KV for attention families, "
+                        "StateSpaceEngine for ssm/hybrid) behind one "
+                        "Scheduler; overrides --model/--tenants (sim) and "
+                        "--arch (real)")
     p.add_argument("--shared-prefix", type=int, default=0, metavar="K",
                    help="sim: the first K tenants serve one identical system "
                         "prompt (one content digest; with --cache-tiers it "
@@ -440,6 +566,8 @@ def main():
         p.error("--concurrency must be >= 1")
     if args.mode == "sim":
         _sim_main(args)
+    elif args.fleet:
+        _real_fleet_main(args)
     else:
         _real_main(args)
 

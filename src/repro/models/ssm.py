@@ -109,8 +109,14 @@ def mamba_decode_step(
     state: Tuple[jax.Array, jax.Array],  # (h (b,d_in,n), conv buffer (b,k-1,d_in))
     p: dict,
     cfg,
+    use_kernel: bool = False,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """O(1) recurrent decode step."""
+    """O(1) recurrent decode step.
+
+    With ``use_kernel=True`` the single-position recurrence update runs
+    through ``kernels.selective_scan`` seeded with the carried state ``h``
+    (the fused Pallas path real serving uses); otherwise the update is the
+    inline XLA einsum form. Both are the same math on the same fp32 state."""
     b = x.shape[0]
     d_in, n = cfg.d_inner, cfg.ssm_state
     h, conv_buf = state
@@ -128,10 +134,17 @@ def mamba_decode_step(
     Bv, Cv, dt_raw = jnp.split(proj, [n, 2 * n], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,1)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
-    dA = jnp.exp(dt[..., None] * A[None])  # (b, d_in, n)
-    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bv.astype(jnp.float32)[:, None, :]
-    h = dA * h + dBx
-    y = jnp.einsum("bdn,bn->bd", h, Cv.astype(jnp.float32))
+    if use_kernel:
+        from repro.kernels.selective_scan.ops import selective_scan
+
+        y1, h = selective_scan(xc[:, None], dt, A, Bv[:, None], Cv[:, None],
+                               h, block_s=1, block_d=d_in)
+        y = y1[:, 0]  # (b, d_in)
+    else:
+        dA = jnp.exp(dt[..., None] * A[None])  # (b, d_in, n)
+        dBx = (dt * xc.astype(jnp.float32))[..., None] * Bv.astype(jnp.float32)[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Cv.astype(jnp.float32))
     y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
     y = y.astype(x.dtype) * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(x.dtype)
     out = jnp.einsum("bd,de->be", y, p["w_out"])[:, None]

@@ -280,8 +280,14 @@ def decode_step(
     token: jax.Array,  # (b, 1) int32 or (b, 1, d_model) embeds for stub frontends
     cfg: ModelConfig,
     state: Dict[str, Any],
+    *,
+    ssm_kernel: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One autoregressive step: append token's KV, attend over cache."""
+    """One autoregressive step: append token's KV, attend over cache.
+
+    ``ssm_kernel=True`` routes SSM/hybrid recurrence updates through the
+    fused ``kernels.selective_scan`` Pallas path (seeded with the carried
+    state); the default inline XLA form is the oracle."""
     if token.ndim == 3:
         h = token.astype(cfg.activation_dtype())
     else:
@@ -305,7 +311,8 @@ def decode_step(
         if cfg.family == "ssm":
             xn = rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
             out, (h_s, conv_s) = mamba_decode_step(
-                xn, (x["ssm_h"], x["ssm_conv"]), lp["mamba"], cfg
+                xn, (x["ssm_h"], x["ssm_conv"]), lp["mamba"], cfg,
+                use_kernel=ssm_kernel,
             )
             carry = carry + out
             ys["ssm_h"], ys["ssm_conv"] = h_s, conv_s
@@ -324,7 +331,8 @@ def decode_step(
         out = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"])
         if cfg.family == "hybrid":
             s_out, (h_s, conv_s) = mamba_decode_step(
-                xn, (x["ssm_h"], x["ssm_conv"]), lp["mamba"], cfg
+                xn, (x["ssm_h"], x["ssm_conv"]), lp["mamba"], cfg,
+                use_kernel=ssm_kernel,
             )
             out = 0.5 * (out + s_out)
             ys["ssm_h"], ys["ssm_conv"] = h_s, conv_s

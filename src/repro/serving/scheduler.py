@@ -14,8 +14,11 @@ Two drivers share the admission logic:
   sim  — discrete-event over ChannelSim; arrival times are respected and
          queueing delay is part of TTFT;
   real — wall clock over RealExecutor; plans are cooperatively multiplexed,
-         a plan blocked on a pending I/O future yields the driver to others
-         (arrival offsets are not simulated in real mode).  Each driver pass
+         a plan blocked on a pending I/O future yields the driver to others.
+         Arrival offsets are wall-clock-faithful: a request is admitted only
+         once ``now - t0 >= arrival`` (the driver sleeps through idle gaps),
+         so every phase of every family is iteration-batched against the
+         traffic that has actually arrived.  Each driver pass
          is an iteration: runnable decode-phase ComputeOps of plans sharing
          one backend coalesce into a single batched kernel call
          (``backend.decode_step_batch`` over the requests' TailPools, ragged
@@ -56,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 from concurrent.futures import FIRST_COMPLETED
 from concurrent.futures import wait as futures_wait
 from typing import Dict, List, Optional, Sequence, Union
@@ -71,6 +75,7 @@ from repro.core.stepplan import (
     StepPlan,
     WaitOp,
     resolve_handle,
+    weight_stream,
 )
 from repro.serving.disagg import INTERCONNECT, DisaggTopology
 from repro.serving.replicas import ReplicaSet
@@ -149,6 +154,8 @@ class CacheAffinityPolicy:
         def affinity(r: Request) -> float:
             eng = engines[r.tenant]
             cache = eng.cache
+            if cache is None:  # cache-less families (StateSpaceEngine)
+                return 0.0
             return (2 * cache.resident_units(eng.tenant, DEVICE)
                     + cache.resident_units(eng.tenant, HOST))
 
@@ -259,6 +266,10 @@ class Scheduler:
         # weight_key), ...] — the regression suite asserts batches never mix
         # phases/weight streams and never run a request's op twice
         self.real_batch_log: List[List[tuple]] = []
+        # sim driver counterpart of real_batch_log: the mixed-fleet property
+        # suite asserts sim batches never amortize weights across model
+        # families either
+        self.sim_batch_log: List[List[tuple]] = []
         # prefill/decode disaggregation (None = colocated single worker).
         # Sim: per-worker compute channels + the interconnect FIFO are
         # registered on the shared ChannelSim; real: decode_backends carries
@@ -380,7 +391,13 @@ class Scheduler:
         one layer's weights, so it only absorbs chunks with the *same*
         ``weight_key`` (concurrent prefills on the same layer); letting a
         decode token join would stretch the chunk from one layer's weight
-        time to the full model's and wreck the leader's TTFT."""
+        time to the full model's and wreck the leader's TTFT.
+
+        Heterogeneous fleets: decode peers must share the leader's exact
+        ``weight_key`` (two models never stream one weight read — a
+        same-family decode key is ``"model@<name>"``), and prefill riders
+        must at least share the leader's :func:`weight_stream` (same model)
+        — the subset argument above only holds within one model's weights."""
         if not (self.batch_decode and isinstance(a.op, ComputeOp)
                 and a.op.tokens > 0):
             return None
@@ -428,7 +445,7 @@ class Scheduler:
                 (b for b in active
                  if isinstance(b.op, ComputeOp) and b.op.tokens > 0
                  and b.op.phase == "decode" and b.resume <= window
-                 and same(b)),
+                 and b.op.weight_key == a.op.weight_key and same(b)),
                 key=order)
             members, total = trim(decode_cands, [], 0)
             # prefill chunks ride only if already runnable at the iteration's
@@ -439,7 +456,8 @@ class Scheduler:
                 (b for b in active
                  if isinstance(b.op, ComputeOp) and b.op.tokens > 0
                  and b.op.phase == "prefill" and b.resume <= start
-                 and same(b)),
+                 and weight_stream(b.op.weight_key)
+                 == weight_stream(a.op.weight_key) and same(b)),
                 key=order)
             members, _ = trim(riders, members, total)
             return members
@@ -491,6 +509,9 @@ class Scheduler:
                 items.append((op.fn, op.flops, op.hbm_bytes, op.weight_bytes))
         tag = members[0].op.tag if len(phases) == 1 else "mixed"
         self.batch_log.append(total)
+        self.sim_batch_log.append(
+            [(b.request.request_id, b.op.phase, b.op.weight_key)
+             for b in members])
         outs, end = self.ex.compute_batch_at(
             items, tag=tag, at=start,
             channel=members[0].plan.clock.channel)
@@ -554,6 +575,10 @@ class Scheduler:
         only exists on the prefill worker.  `tokens` is the causal extent a
         decode-worker recompute would have to cover to rebuild the same KV."""
         eng = self.engines[a.request.tenant]
+        if hasattr(eng, "handoff_payload"):
+            # family-specific pricing (StateSpaceEngine: the recurrent state
+            # + any hybrid attention KV, not prefix-store units)
+            return eng.handoff_payload(a)
         layout = eng.session.store.layout
         sel = a.plan.trace.selected_per_layer
         max_unit = max((int(u) for us in sel.values() for u in us),
@@ -653,8 +678,8 @@ class Scheduler:
         ``now`` is the next scheduling event (sim) or the wall clock
         relative to the run start (real).  Picks the earliest-deadline
         queued request with a TTFT target (``arrived_only`` additionally
-        gates on ``arrival <= now`` — sim respects arrival offsets, the
-        real driver does not simulate them), projects its miss
+        gates on ``arrival <= now`` — both drivers respect arrival offsets
+        since the real admission refactor), projects its miss
         (``now + prefill_estimate > deadline``) and selects the
         decode-phase victim with the farthest, strictly-later deadline.
         Returns (urgent, victim) or None — the drivers own the mechanics
@@ -739,6 +764,8 @@ class Scheduler:
     def _resident_bytes(self, a: _Active) -> int:
         """Bytes of the plan's currently-selected units (the swap payload)."""
         eng = self.engines[a.request.tenant]
+        if hasattr(eng, "swap_bytes_of"):
+            return eng.swap_bytes_of(a)
         layout = eng.session.store.layout
         sel = a.plan.trace.selected_per_layer
         if a.plan.trace.decode_selected:
@@ -871,7 +898,7 @@ class Scheduler:
                 and len(active) >= self.max_concurrency):
             return
         sel = self._select_preemption(pending, active, self.ex.now() - t0,
-                                      arrived_only=False)
+                                      arrived_only=True)
         if sel is None:
             return
         urgent, v = sel
@@ -934,7 +961,13 @@ class Scheduler:
         groups: Dict[tuple, List[_Active]] = {}
         for a in cands:
             ctx = a.op.batch_ctx
-            key = (id(ctx.backend), bool(ctx.pools[0].is_device))
+            # weight_key joins the group key for heterogeneous fleets: two
+            # different models' decode steps never share one weight stream,
+            # so they must never land in one kernel pass (backend identity
+            # already separates them today, but the key makes the contract
+            # explicit and survives backend sharing)
+            key = (id(ctx.backend), bool(ctx.pools[0].is_device),
+                   a.op.weight_key)
             groups.setdefault(key, []).append(a)
         # the group holding the longest-waiting candidate wins; group size
         # breaks ties so throughput is preserved when nobody is starved
@@ -1055,8 +1088,15 @@ class Scheduler:
         t0 = ex.now()
         while pending or active or preempted:
             self._resume_real(preempted, active)
+            # arrival-aware admission: only requests whose offset has passed
+            # on the wall clock may enter — the open-loop trace shape (and
+            # therefore what each iteration can batch) matches the sim driver
             while pending and len(active) < self.max_concurrency:
-                req = self.policy.select(pending, self.engines)
+                arrived = [r for r in pending
+                           if r.arrival <= ex.now() - t0]
+                if not arrived:
+                    break
+                req = self.policy.select(arrived, self.engines)
                 pending.remove(req)
                 self._start_real(req, active, done)
             self._preempt_real(pending, active, preempted, t0, done)
@@ -1111,6 +1151,12 @@ class Scheduler:
                 futs = [a.op.handle.future for a in active
                         if isinstance(a.op, WaitOp) and a.op.handle.future is not None]
                 futures_wait(futs, return_when=FIRST_COMPLETED)
+            elif not progressed and pending:
+                # idle system, all remaining traffic is in the future: sleep
+                # through the gap to the next arrival instead of spinning
+                gap = min(r.arrival for r in pending) - (ex.now() - t0)
+                if gap > 0:
+                    time.sleep(gap)
         done.sort(key=lambda c: c.request.request_id)
         return done
 

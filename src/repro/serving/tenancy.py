@@ -12,11 +12,11 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import get_config, resolve_config_name
 from repro.core.backends import SimCompute
 from repro.core.cache import AttentionGuidedCache
 from repro.storage.tierstore import TieredPrefixStore
@@ -25,6 +25,7 @@ from repro.core.engine import (
     ASLRUEngine,
     ContiguousKVEngine,
     IMPRESSEngine,
+    StateSpaceEngine,
 )
 from repro.core.hybrid import HybridPlanner
 from repro.core.session import SyntheticWorkload, build_sim_session
@@ -38,6 +39,29 @@ ENGINE_CLASSES = {
     "as_h2o_lfu": ASH2OEngine,
     "as_lru": ASLRUEngine,
 }
+
+
+def parse_fleet_spec(spec: str) -> List[Tuple[str, int]]:
+    """``"qwen2_5_7b:2,falcon_mamba_7b:1"`` -> [("qwen2.5-7b", 2), ...].
+
+    Each entry is ``model[:count]`` (count defaults to 1); model names
+    tolerate underscore CLI spellings via :func:`resolve_config_name`."""
+    entries: List[Tuple[str, int]] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, count = part.partition(":")
+        try:
+            n = int(count) if count else 1
+        except ValueError:
+            raise ValueError(f"bad fleet entry {part!r}: count must be int")
+        if n < 1:
+            raise ValueError(f"bad fleet entry {part!r}: count must be >= 1")
+        entries.append((resolve_config_name(name), n))
+    if not entries:
+        raise ValueError(f"empty fleet spec {spec!r}")
+    return entries
 
 
 @dataclasses.dataclass
@@ -59,6 +83,9 @@ class TenantFleet:
     workloads: Dict[int, SyntheticWorkload]
     topology: Optional[DisaggTopology] = None
     replicas: Optional[ReplicaSet] = None
+    # heterogeneous fleets: tenant -> the model config its engine serves
+    # (uniform fleets fill this too; empty only for pre-fleet pickles)
+    configs: Dict[int, object] = dataclasses.field(default_factory=dict)
 
 
 def build_sim_fleet(
@@ -83,12 +110,24 @@ def build_sim_fleet(
     replicas: Optional[ReplicaSet] = None,
     prefix_digests: Optional[Dict[int, str]] = None,
     segment_units: int = 64,
+    fleet: Optional[str] = None,
 ) -> TenantFleet:
     """Build `n_tenants` engines of one system sharing executor + cache.
 
     Tenant ids are 1..n_tenants (0 is the single-tenant legacy namespace).
     Non-ContiguousKV systems get their own policy class but still share one
     cache *instance* across tenants, so occupancy competition is real.
+
+    ``fleet`` (``"model:count,model:count"``, see :func:`parse_fleet_spec`)
+    builds a *heterogeneous* fleet instead: ``model_name``/``n_tenants`` are
+    ignored and each spec entry contributes ``count`` tenants of its model.
+    Attention-family tenants get the requested KV ``system`` engine as usual
+    (tenants of the *same* model share one cache instance; different models
+    never share a cache — their KV layouts differ); ssm/hybrid tenants get a
+    :class:`repro.core.engine.StateSpaceEngine`, whose plans carry the
+    family's constant-per-step decode costs and ``"model@<name>"`` weight
+    streams so one Scheduler can iteration-batch the mix without ever
+    amortizing weights across families.
 
     ``ssd_cap > 0`` (contiguous_kv only) upgrades the shared cache to the
     content-addressed three-tier :class:`TieredPrefixStore` — host victims
@@ -99,7 +138,12 @@ def build_sim_fleet(
     their workloads draw from one digest-keyed importance field instead of
     per-tenant fields (identical content attends identically).
     """
-    cfg = get_config(model_name)
+    if fleet is not None:
+        tenant_cfgs = [get_config(name)
+                       for name, count in parse_fleet_spec(fleet)
+                       for _ in range(count)]
+    else:
+        tenant_cfgs = [get_config(model_name)] * n_tenants
     executor = ChannelSim(device_model or DeviceModel())
     if replicas is not None:
         if topology is not None and replicas.topology is None:
@@ -114,10 +158,18 @@ def build_sim_fleet(
               else HybridPlanner(hybrid_reprefill,
                                  device_model=executor.model))
     shared_cache = None
+    model_caches: Dict[str, object] = {}  # per-model shared cache (fleets)
     engines: Dict[int, object] = {}
     workloads: Dict[int, SyntheticWorkload] = {}
+    configs: Dict[int, object] = {}
     digests = prefix_digests or {}
-    for tenant in range(1, n_tenants + 1):
+    for tenant, cfg in enumerate(tenant_cfgs, start=1):
+        configs[tenant] = cfg
+        if cfg.family in ("ssm", "hybrid"):
+            engines[tenant] = StateSpaceEngine(
+                cfg, None, executor, prefix_len=prefix_len, tenant=tenant,
+                prefill_chunk_tokens=prefill_chunk_tokens)
+            continue
         coarse = system != "contiguous_kv"
         digest = digests.get(tenant)
         sess = build_sim_session(cfg, prefix_len, chunk_tokens=chunk_tokens,
@@ -132,16 +184,18 @@ def build_sim_fleet(
             wl_seed = seed + 1000 * tenant
         wl = SyntheticWorkload(prefix_len, cfg.n_layers, seed=wl_seed)
         be = SimCompute(cfg, wl)
+        model_cache = model_caches.get(cfg.name)
         if system == "contiguous_kv":
-            if shared_cache is None:
+            if model_cache is None:
                 if ssd_cap > 0:
-                    shared_cache = TieredPrefixStore(
+                    model_cache = TieredPrefixStore(
                         device_cap, host_cap, ssd_cap,
                         unit_bytes=sess.store.layout.unit_bytes,
                         segment_units=segment_units, payload_mode="plan")
                 else:
-                    shared_cache = AttentionGuidedCache(device_cap, host_cap)
-            eng = cls(sess, be, executor, cache=shared_cache, budget=budget,
+                    model_cache = AttentionGuidedCache(device_cap, host_cap)
+                model_caches[cfg.name] = model_cache
+            eng = cls(sess, be, executor, cache=model_cache, budget=budget,
                       period=period, subperiod=subperiod,
                       prefill_chunk_tokens=prefill_chunk_tokens,
                       hybrid=hybrid)
@@ -152,12 +206,14 @@ def build_sim_fleet(
             if system != "as_lru":
                 kw["budget"] = budget
             eng = cls(sess, be, executor, **kw)
-            if shared_cache is None:
-                shared_cache = eng.cache
+            if model_cache is None:
+                model_caches[cfg.name] = eng.cache
             else:
-                eng.cache = shared_cache  # all tenants contend for one policy
+                eng.cache = model_cache  # same-model tenants share one policy
+        if shared_cache is None:
+            shared_cache = model_caches[cfg.name]
         engines[tenant] = eng
         workloads[tenant] = wl
     return TenantFleet(engines=engines, executor=executor, cache=shared_cache,
                        workloads=workloads, topology=topology,
-                       replicas=replicas)
+                       replicas=replicas, configs=configs)

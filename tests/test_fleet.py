@@ -1,0 +1,328 @@
+"""Heterogeneous fleet serving: family-aware plans behind one Scheduler.
+
+Covers the fleet tentpole end to end:
+  spec parsing   — underscore CLI names resolve to registry keys, counts
+                   expand, malformed entries raise;
+  pricing        — SSM decode cost is constant per step (fixed recurrent
+                   state, no growing KV read), hybrid adds only its
+                   attention span, and MoE decode weights price the router
+                   plus the top-k *active* experts, not the full stack;
+  stream purity  — property over the sim and real batch logs: no batched
+                   iteration ever amortizes weights across model families
+                   (every batch holds exactly one weight stream);
+  bit parity     — each new family (ssm / hybrid / moe) served through
+                   Scheduler(max_concurrency=1) reproduces drive_serial
+                   bit-for-bit, alone and inside a mixed fleet;
+  preemption     — StatePool swap_out -> swap_in is bit-identical, direct
+                   and under SLO-driven scheduler preemption.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config, resolve_config_name
+from repro.core import costmodel as CM
+from repro.core.stepplan import drive_serial, weight_stream
+from repro.serving import Request, Scheduler
+from repro.serving.tenancy import build_sim_fleet, parse_fleet_spec
+from repro.storage.timing import (
+    ChannelSim,
+    DeviceModel,
+    RealExecutor,
+    SimExecutor,
+)
+
+MIXED_SPEC = "qwen2_5_7b:2,falcon_mamba_7b:1,granite_moe_3b_a800m:1"
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+class TestFleetSpec:
+    def test_underscore_names_resolve(self):
+        assert parse_fleet_spec(MIXED_SPEC) == [
+            ("qwen2.5-7b", 2), ("falcon-mamba-7b", 1),
+            ("granite-moe-3b-a800m", 1)]
+
+    def test_count_defaults_to_one(self):
+        assert parse_fleet_spec("yi-34b") == [("yi-34b", 1)]
+
+    def test_resolve_config_name_is_canonical(self):
+        assert resolve_config_name("qwen2_5_7b") == "qwen2.5-7b"
+        assert resolve_config_name("QWEN2.5-7B") == "qwen2.5-7b"
+        with pytest.raises(KeyError):
+            resolve_config_name("not-a-model")
+
+    @pytest.mark.parametrize("bad", ["qwen2.5-7b:x", "qwen2.5-7b:0", ",,"])
+    def test_malformed_entries_raise(self, bad):
+        with pytest.raises(ValueError):
+            parse_fleet_spec(bad)
+
+
+# ---------------------------------------------------------------------------
+# family-aware pricing
+# ---------------------------------------------------------------------------
+class TestFamilyPricing:
+    def test_ssm_decode_cost_is_position_independent(self):
+        cfg = get_config("falcon-mamba-7b")
+        c = CM.ssm_decode_cost(cfg)
+        assert c.flops > 0 and c.hbm_bytes > 0
+        # the plan prices every step with the same call: no growing KV term
+        assert CM.ssm_decode_cost(cfg).hbm_bytes == c.hbm_bytes
+
+    def test_hybrid_decode_grows_only_with_attention_span(self):
+        cfg = get_config("hymba-1.5b")
+        near = CM.ssm_decode_cost(cfg, [128] * cfg.n_layers)
+        far = CM.ssm_decode_cost(cfg, [4096] * cfg.n_layers)
+        assert far.hbm_bytes > near.hbm_bytes
+        # the growth is exactly the extra KV read, not re-priced weights
+        extra_kv = (4096 - 128) * CM.token_kv_bytes(cfg) * cfg.n_layers
+        assert far.hbm_bytes - near.hbm_bytes == pytest.approx(extra_kv,
+                                                              rel=1e-6)
+
+    def test_ssm_state_bytes_constant_per_request(self):
+        cfg = get_config("falcon-mamba-7b")
+        n = CM.ssm_state_bytes(cfg)
+        assert n == cfg.d_inner * cfg.ssm_state * 4 + \
+            (cfg.ssm_conv - 1) * cfg.d_inner * 2
+        assert CM.ssm_state_bytes(get_config("qwen2.5-7b")) == 0
+
+    def test_moe_decode_weights_price_active_experts_only(self):
+        cfg = get_config("mixtral-8x22b")
+        per_layer = CM.layer_weight_bytes(cfg)
+        router = cfg.d_model * cfg.n_experts
+        active = cfg.top_k * 3 * cfg.d_model * cfg.moe_d_ff
+        # router + top-k active experts stream; the idle experts do not
+        assert per_layer >= (router + active) * 2
+        full_stack = dataclasses.replace(cfg, top_k=cfg.n_experts)
+        idle = (cfg.n_experts - cfg.top_k) * 3 * cfg.d_model * cfg.moe_d_ff
+        assert CM.layer_weight_bytes(full_stack) - per_layer == idle * 2
+
+    def test_dense_pricing_unchanged_by_family_dispatch(self):
+        cfg = get_config("qwen2.5-7b")
+        per = (cfg.d_model * cfg.attn_dim + 2 * cfg.d_model * cfg.kv_dim
+               + cfg.attn_dim * cfg.d_model + 3 * cfg.d_model * cfg.d_ff)
+        assert CM.layer_weight_bytes(cfg) == per * 2
+
+
+# ---------------------------------------------------------------------------
+# mixed fleet, sim driver
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mixed_sim_run():
+    fleet = build_sim_fleet("contiguous_kv", "qwen2.5-7b", fleet=MIXED_SPEC,
+                            prefix_len=2048, prefill_chunk_tokens=64)
+    rng = np.random.default_rng(0)
+    n_tenants = len(fleet.engines)
+    reqs = [Request(request_id=i, suffix=rng.integers(0, 1000, 64),
+                    arrival=0.002 * i, tenant=1 + i % n_tenants,
+                    decode_tokens=8)
+            for i in range(12)]
+    sched = Scheduler(fleet.engines, max_concurrency=4, max_batch_tokens=256)
+    return fleet, sched, sched.run(reqs)
+
+
+class TestMixedSimFleet:
+    def test_every_request_completes(self, mixed_sim_run):
+        fleet, _, done = mixed_sim_run
+        assert len(done) == 12
+        assert all(len(c.trace.decode_times) == 8 for c in done)
+
+    def test_family_engines_dispatched(self, mixed_sim_run):
+        fleet, _, _ = mixed_sim_run
+        names = {t: type(e).__name__ for t, e in fleet.engines.items()}
+        assert names[3] == "StateSpaceEngine"  # falcon-mamba tenant
+        assert names[1] == names[2] == names[4] == "ContiguousKVEngine"
+
+    def test_sim_batches_never_mix_model_families(self, mixed_sim_run):
+        _, sched, _ = mixed_sim_run
+        assert sched.sim_batch_log, "no sim batch formed"
+        for members in sched.sim_batch_log:
+            streams = {weight_stream(wk) for _, _, wk in members}
+            assert len(streams) == 1, members
+
+    def test_decode_batches_share_exact_weight_key(self, mixed_sim_run):
+        _, sched, _ = mixed_sim_run
+        for members in sched.sim_batch_log:
+            decode_keys = {wk for _, phase, wk in members
+                           if phase == "decode"}
+            assert len(decode_keys) <= 1, members
+
+    def test_same_model_tenants_do_batch(self, mixed_sim_run):
+        """The refusal is per *model*, not per tenant: the two qwen tenants
+        must still coalesce (otherwise the fleet lost continuous batching)."""
+        _, sched, _ = mixed_sim_run
+        assert any(len({rid for rid, _, _ in m}) > 1
+                   for m in sched.sim_batch_log)
+
+
+# ---------------------------------------------------------------------------
+# real mode: per-family c=1 bit parity + mixed fleet
+# ---------------------------------------------------------------------------
+def _real_engine(name, ex, *, prefix, params_seed=0):
+    import jax
+
+    from repro.core import build_real_session
+    from repro.core.backends import RealCompute, StateCompute
+    from repro.models import transformer as T
+
+    cfg = reduced_config(name)
+    params = T.init_params(jax.random.PRNGKey(params_seed), cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.core.engine import StateSpaceEngine
+
+        return StateSpaceEngine(cfg, StateCompute(cfg, params), ex,
+                                prefix_tokens=prefix), cfg
+    from repro.core.engine import ContiguousKVEngine
+
+    sess = build_real_session(cfg, params, prefix, chunk_tokens=16,
+                              in_memory=True)
+    return ContiguousKVEngine(sess, RealCompute(cfg, params), ex,
+                              budget=0.5, device_cap=64, host_cap=128), cfg
+
+
+NEW_FAMILIES = ["falcon-mamba-7b", "hymba-1.5b", "granite-moe-3b-a800m"]
+REAL_PREFIX = 96
+REAL_DECODE = 4
+
+
+def _real_prefix(vocab=256):
+    return (np.arange(REAL_PREFIX) % vocab).astype(np.int64)
+
+
+def _real_suffix(rid, vocab=256):
+    return ((np.arange(16) + 3 * rid) % vocab).astype(np.int64)
+
+
+@pytest.fixture(scope="module")
+def serial_family_runs():
+    """family name -> [(logits, decode token ids)] serial references."""
+    out = {}
+    for name in NEW_FAMILIES:
+        eng, _ = _real_engine(name, RealExecutor(), prefix=_real_prefix())
+        runs = []
+        for rid in range(2):
+            logits, tr = eng.reprefill(_real_suffix(rid), request_id=rid,
+                                       decode_tokens=REAL_DECODE)
+            runs.append((np.asarray(logits), list(tr.decode_tokens_out)))
+        out[name] = runs
+    return out
+
+
+@pytest.mark.parametrize("name", NEW_FAMILIES)
+def test_real_c1_scheduler_bit_identical_to_serial(name, serial_family_runs):
+    eng, _ = _real_engine(name, RealExecutor(), prefix=_real_prefix())
+    sched = Scheduler(eng, max_concurrency=1)
+    reqs = [Request(request_id=rid, suffix=_real_suffix(rid),
+                    decode_tokens=REAL_DECODE) for rid in range(2)]
+    done = sched.run(reqs)
+    for rid, c in enumerate(done):
+        ref_logits, ref_toks = serial_family_runs[name][rid]
+        np.testing.assert_array_equal(np.asarray(c.result), ref_logits)
+        assert list(c.trace.decode_tokens_out) == ref_toks
+
+
+def test_real_mixed_fleet_c1_matches_each_family_alone(serial_family_runs):
+    """A mixed fleet served serially must emit, per family, exactly the
+    logits/tokens that family produces when served alone."""
+    ex = RealExecutor()
+    engines = {}
+    for tenant, name in enumerate(NEW_FAMILIES, start=1):
+        eng, _ = _real_engine(name, ex, prefix=_real_prefix())
+        eng.tenant = tenant
+        engines[tenant] = eng
+    reqs = [Request(request_id=rid, suffix=_real_suffix(rid % 2),
+                    tenant=1 + rid % 3, decode_tokens=REAL_DECODE)
+            for rid in range(6)]
+    done = Scheduler(engines, max_concurrency=1).run(reqs)
+    for c in done:
+        name = NEW_FAMILIES[c.request.tenant - 1]
+        ref_logits, ref_toks = serial_family_runs[name][
+            c.request.request_id % 2]
+        np.testing.assert_array_equal(np.asarray(c.result), ref_logits)
+        assert list(c.trace.decode_tokens_out) == ref_toks
+
+
+def test_real_mixed_fleet_batches_stay_family_pure():
+    """Concurrent mixed serving: same-model decode steps coalesce, but no
+    real batch ever spans two model families (weight_key purity)."""
+    import jax
+
+    from repro.core.backends import StateCompute
+    from repro.core.engine import StateSpaceEngine
+    from repro.models import transformer as T
+
+    ex = RealExecutor()
+    engines = {}
+    roster = ["falcon-mamba-7b", "falcon-mamba-7b", "hymba-1.5b",
+              "hymba-1.5b"]
+    backends = {}  # same-model tenants share one backend, like serve --fleet
+    for tenant, name in enumerate(roster, start=1):
+        if name not in backends:
+            cfg = reduced_config(name)
+            params = T.init_params(jax.random.PRNGKey(0), cfg)
+            backends[name] = (cfg, StateCompute(cfg, params))
+        cfg, be = backends[name]
+        engines[tenant] = StateSpaceEngine(cfg, be, ex,
+                                           prefix_tokens=_real_prefix(),
+                                           tenant=tenant)
+    sched = Scheduler(engines, max_concurrency=4)
+    reqs = [Request(request_id=rid, suffix=_real_suffix(rid),
+                    tenant=1 + rid % 4, decode_tokens=REAL_DECODE)
+            for rid in range(4)]
+    done = sched.run(reqs)
+    assert len(done) == 4
+    assert sched.real_batch_log, "no real batch formed"
+    for members in sched.real_batch_log:
+        assert len({weight_stream(wk) for _, _, wk in members}) == 1
+        assert len({wk for _, _, wk in members}) == 1
+
+
+# ---------------------------------------------------------------------------
+# StatePool swap round trips
+# ---------------------------------------------------------------------------
+def test_state_pool_swap_round_trip_bit_identity():
+    import jax
+
+    from repro.core.backends import StateCompute
+    from repro.models import transformer as T
+
+    cfg = reduced_config("falcon-mamba-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    be = StateCompute(cfg, params)
+    logits, pool = be.prefill(_real_prefix(), extra_tokens=3)
+    tok = int(np.argmax(np.asarray(logits)[0, -1]))
+    ref_logits, ref_state = be.decode_step(tok, pool.state)
+    before = {k: np.asarray(v) for k, v in pool.state.items()}
+    out_bytes = pool.swap_out()
+    assert out_bytes > 0 and not pool.is_resident
+    in_bytes = pool.swap_in()
+    assert in_bytes == out_bytes and pool.is_resident
+    for k, v in pool.state.items():
+        np.testing.assert_array_equal(np.asarray(v), before[k])
+    got_logits, _ = be.decode_step(tok, pool.state)
+    np.testing.assert_array_equal(np.asarray(got_logits),
+                                  np.asarray(ref_logits))
+
+
+def test_ssm_decode_survives_scheduler_preemption():
+    """An SSM decode preempted (swap_on_preempt) mid-stream must emit the
+    same token ids as an uninterrupted run — the StatePool swap round trip
+    under the real scheduler."""
+    serial_eng, _ = _real_engine("falcon-mamba-7b", RealExecutor(),
+                                 prefix=_real_prefix())
+    _, ref = serial_eng.reprefill(_real_suffix(0), request_id=0,
+                                  decode_tokens=8)
+    eng, _ = _real_engine("falcon-mamba-7b", RealExecutor(),
+                          prefix=_real_prefix())
+    sched = Scheduler(eng, max_concurrency=1, preempt=True,
+                      swap_on_preempt=True, prefill_estimate=1e3)
+    reqs = [Request(request_id=0, suffix=_real_suffix(0), decode_tokens=8),
+            Request(request_id=1, suffix=_real_suffix(1), decode_tokens=1,
+                    ttft_target=1e-6)]
+    done = sched.run(reqs)
+    assert sched.preemptions >= 1 and sched.swaps >= 1
+    victim = next(c for c in done if c.request.request_id == 0)
+    assert victim.preemptions >= 1
+    assert list(victim.trace.decode_tokens_out) == list(ref.decode_tokens_out)

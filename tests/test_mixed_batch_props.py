@@ -15,7 +15,7 @@ tests/_hypothesis_compat.py.
 The real (wall-clock) driver's batch former has its own invariants, checked
 on a tiny real model at the bottom of this file:
   purity         — a batch never mixes phases or weight streams (decode
-                   steps only, ``weight_key="model"``);
+                   steps only, ``weight_key="model@<cfg.name>"``);
   membership     — every batch member was a runnable decode candidate at
                    the iteration's start, and candidates left out stay
                    runnable into a later iteration;
@@ -178,7 +178,9 @@ def test_real_batches_never_mix_phases_or_weight_streams(real_run):
     for members in sched.real_batch_log:
         assert all(phase == "decode" for _, phase, _ in members)
         assert len({wk for _, _, wk in members}) == 1
-        assert all(wk == "model" for _, _, wk in members)
+        # decode keys are whole-model streams, namespaced per model so a
+        # heterogeneous fleet's batch former can refuse cross-family joins
+        assert all(wk.startswith("model@") for _, _, wk in members)
 
 
 def test_real_batch_members_fire_once_per_iteration(real_run):
